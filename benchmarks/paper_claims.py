@@ -1,0 +1,337 @@
+"""One benchmark per Table-I row / survey claim.
+
+Each function returns (derived_metric, details) where ``derived`` is the
+headline number comparable against the paper's reported effect.  The paper
+is a survey, so 'reproduction' means: our implementation of each row's
+MECHANISM must show the claimed effect direction and magnitude within our
+cost/simulation models (EXPERIMENTS.md §Paper-claims records the comparison).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+from repro.ccl.algorithms import generate_flows
+from repro.ccl.cost import CostParams, algo_cost
+from repro.ccl.select import select_algorithm
+from repro.ccl.synth import Sketch, synthesize
+from repro.configs import get_config
+from repro.core.demand import CommTask
+from repro.core.demand_builder import (DemandParams, build_demand,
+                                       janus_traffic_ratio)
+from repro.core.types import MeshConfig, SHAPES_BY_NAME, SINGLE_POD_MESH
+from repro.net.simulate import simulate_flowset
+from repro.net.topology import dgx_cluster, fat_tree, ring, torus2d, torus3d
+from repro.parallel.pipeline import bubble_fraction, iteration_time
+from repro.sched.atp import atp_traffic
+from repro.sched.flows import JobProfile, stagger_jobs
+from repro.sched.tasks import simulate_iteration
+
+CP_ICI = CostParams(alpha=1e-6, link_bw=50e9)
+CP_IB = CostParams(alpha=5e-6, link_bw=25e9)
+
+
+def _cost_fn(cp: CostParams):
+    def cost(t: CommTask) -> float:
+        if t.primitive == "all_reduce":
+            return select_algorithm(t.primitive, t.size_bytes, len(t.group),
+                                    cp)[1]
+        algo = "direct" if t.primitive == "all_to_all" else "ring"
+        return algo_cost(t.primitive, algo, t.size_bytes, len(t.group), cp)
+    return cost
+
+
+# ---------------------------------------------------------------------------
+# Row: Megatron-LM — 74% of linear scaling on 512 GPUs
+# ---------------------------------------------------------------------------
+
+
+def bench_megatron_tp_scaling() -> Tuple[float, Dict]:
+    """8.3B-param GPT, TP within 8-GPU hosts + DP across hosts.  Scaling
+    efficiency at 512 GPUs = per-GPU throughput / single-host per-GPU
+    throughput, from the task-graph sim with NVLink intra / IB inter costs.
+    Paper: 77% at 8 GPUs (vs linear), 74% at 512."""
+    import dataclasses
+    cfg = dataclasses.replace(
+        get_config("granite-3-8b"), name="megatron-8.3b", num_layers=72,
+        d_model=3072, num_heads=32, num_kv_heads=32, head_dim=96,
+        d_ff=12288, vocab_size=51200, ffn_act="gelu")
+    shape = SHAPES_BY_NAME["train_4k"]
+    nvlink = CostParams(alpha=1e-6, link_bw=150e9)
+
+    def efficiency(n_gpus: int) -> float:
+        mesh = MeshConfig(shape=(n_gpus // 8, 8),
+                          axis_names=("data", "model"))
+        dem = build_demand(cfg, shape, mesh, DemandParams(mfu=0.52))
+
+        def cost(t):
+            cp = nvlink if t.primitive == "all_reduce" and \
+                len(t.group) <= 8 else CP_IB
+            return _cost_fn(cp)(t)
+
+        r = simulate_iteration(dem, cost, "priority")
+        # fraction of ideal (communication-free) linear scaling
+        return r.compute_time / r.jct
+
+    eff8, eff512 = efficiency(8), efficiency(512)
+    return eff512, {"paper_512": 0.74, "paper_8": 0.77,
+                    "ours_8": round(eff8, 3), "ours_512": round(eff512, 3),
+                    "basis": "compute / JCT (ideal-linear fraction)"}
+
+
+# ---------------------------------------------------------------------------
+# Row: PTD-P — interleaved pipeline; 52% of peak on 3072 GPUs
+# ---------------------------------------------------------------------------
+
+
+def bench_ptdp_interleaved() -> Tuple[float, Dict]:
+    """Interleaved schedule shrinks the bubble (p-1)/m -> (p-1)/(m*v).
+    Derived: bubble reduction factor at PTD-P's setting (p=8, m=8, v=4)
+    and the resulting iteration-time speedup including the extra comm."""
+    p, m, v = 8, 8, 4
+    b1 = bubble_fraction(p, m, 1)
+    bv = bubble_fraction(p, m, v)
+    t_chunk, t_comm = 10e-3, 0.4e-3
+    t1 = iteration_time(p, m, 1, t_chunk, t_comm)
+    tv = iteration_time(p, m, v, t_chunk, t_comm)
+    return b1 / bv, {"bubble_v1": b1, "bubble_v4": bv,
+                     "iter_speedup": round(t1 / tv, 3),
+                     "paper": "bubble / v; interleaving trades bubble for comm"}
+
+
+# ---------------------------------------------------------------------------
+# Row: Lina — prioritize All-to-All; up to 1.73x
+# ---------------------------------------------------------------------------
+
+
+def bench_lina_priority() -> Tuple[float, Dict]:
+    """Lina row, two parts.
+    (a) dbrx-132b end-to-end: overlap policies vs no-overlap across fabric
+        speeds — in homogeneous per-layer MoE traffic FIFO is already
+        near-optimal, so the gain is the hide-the-gradients effect.
+    (b) the preemption mechanism itself (Lina's actual contribution:
+        All-to-All preempts a long gradient sync): an adversarial micro
+        task graph where FIFO strands a blocking A2A behind a gradient."""
+    cfg = get_config("dbrx-132b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    dem = build_demand(cfg, shape, SINGLE_POD_MESH,
+                       DemandParams(mfu=0.5, grad_bytes=4))
+    best = {"e2e_speedup": 1.0}
+    for bw in (25e9, 12e9, 8e9, 5e9):
+        cost = _cost_fn(CostParams(alpha=5e-6, link_bw=bw))
+        serial = simulate_iteration(dem, cost, "serial")
+        pre = simulate_iteration(dem, cost, "preempt")
+        sp = serial.jct / pre.jct
+        if sp > best["e2e_speedup"]:
+            best = {"e2e_speedup": round(sp, 3), "bw_GBps": bw / 1e9,
+                    "serial_s": round(serial.jct, 2),
+                    "preempt_s": round(pre.jct, 2)}
+
+    # (b) preemption micro-benchmark: a long gradient sync starts just
+    # before a blocking A2A becomes ready; enough downstream compute exists
+    # to hide the paused gradient's remainder.
+    from repro.core.demand import CommDemand, CommTask, ComputeTask
+    micro = CommDemand()
+    micro.compute_tasks = [ComputeTask("c0", 0, 10e-3)] + [
+        ComputeTask(f"c{i}", 0, 25e-3) for i in range(1, 6)
+    ] + [ComputeTask("opt", 0, 1e-3)]
+    micro.comm_tasks = [
+        CommTask("grad", "all_reduce", int(100e-3 * 50e9), (0, 1),
+                 after_compute=("c0",), before_compute="opt", slack=1.0),
+        CommTask("a2a", "all_to_all", int(20e-3 * 50e9 * 2), (0, 1),
+                 after_compute=("c0",), before_compute="c1", slack=0.0),
+    ]
+    cost = _cost_fn(CostParams(alpha=1e-6, link_bw=50e9))
+    fifo = simulate_iteration(micro, cost, "fifo").jct
+    pre = simulate_iteration(micro, cost, "preempt").jct
+    best["micro_fifo_ms"] = round(fifo * 1e3, 1)
+    best["micro_preempt_ms"] = round(pre * 1e3, 1)
+    best["micro_preempt_speedup"] = round(fifo / pre, 2)
+    return max(best["e2e_speedup"], best["micro_preempt_speedup"]), \
+        dict(best, paper="up to 1.73x")
+
+
+# ---------------------------------------------------------------------------
+# Row: Janus — data-centric MoE; up to 16x traffic reduction
+# ---------------------------------------------------------------------------
+
+
+def bench_janus_data_centric() -> Tuple[float, Dict]:
+    shape = SHAPES_BY_NAME["train_4k"]
+    out = {}
+    for arch in ("dbrx-132b", "deepseek-v2-236b", "jamba-1.5-large-398b"):
+        r = janus_traffic_ratio(get_config(arch), shape, SINGLE_POD_MESH)
+        out[arch] = round(r["ratio"], 2)
+    return max(out.values()), dict(out, paper="up to 16x when experts < data")
+
+
+# ---------------------------------------------------------------------------
+# Rows: NCCL / SCCL — algorithm selection & synthesis speedups
+# ---------------------------------------------------------------------------
+
+
+def bench_nccl_selection() -> Tuple[float, Dict]:
+    """Auto-selection vs always-ring across message sizes (NCCL row).
+    Derived: max speedup of selected vs ring (small messages)."""
+    worst = 1.0
+    cross = None
+    for exp in range(10, 31):
+        n = 2 ** exp
+        best_name, best_cost, costs = select_algorithm(
+            "all_reduce", n, 16, CP_ICI)
+        sp = costs["ring"] / best_cost
+        worst = max(worst, sp)
+        if cross is None and best_name in ("ring", "bidir_ring"):
+            cross = n  # smallest size where bandwidth-optimal wins
+    return worst, {"max_speedup_vs_ring": round(worst, 2),
+                   "bandwidth_crossover_bytes": cross,
+                   "paper": "NCCL picks latency-optimal for small msgs"}
+
+
+def bench_sccl_synthesis() -> Tuple[float, Dict]:
+    """Synthesized All-Gather vs ring All-Gather on the heterogeneous DGX
+    topology (SCCL: 1.14-2.2x on All-Gather).  Simulated completion time."""
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)
+    speedups = {}
+    for size in (2 ** 16, 2 ** 20, 2 ** 24):
+        task = CommTask("ag", "all_gather", size, group)
+        ring_fs = generate_flows(task, "ring")
+        t_ring = simulate_flowset(topo, ring_fs)
+        syn_fs = synthesize(topo, task, Sketch(max_hops=4))
+        speedups[size] = round(t_ring / syn_fs.makespan, 2)
+    best = max(speedups.values())
+    return best, dict({f"{k>>10}KiB": v for k, v in speedups.items()},
+                      paper="1.14-2.2x vs NCCL all-gather")
+
+
+# ---------------------------------------------------------------------------
+# Row: TACCL — sketch shrinks synthesis; 2.36x BERT (we report collective
+# speedup of sketch-guided vs unguided greedy on heterogeneous topology)
+# ---------------------------------------------------------------------------
+
+
+def bench_taccl_sketch() -> Tuple[float, Dict]:
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)
+    task = CommTask("ag", "all_gather", 2 ** 20, group)
+    t_free = synthesize(topo, task, Sketch(max_hops=8)).makespan
+    # sketch: prefer NVLink, single NIC hop (enter host via its NIC only)
+    allowed = {(u, v) for u, v, d in topo.links()}
+    t_sketch = synthesize(
+        topo, task, Sketch(allowed_links=allowed, max_hops=3)).makespan
+    return t_free / t_sketch, {
+        "unguided_ms": round(t_free * 1e3, 3),
+        "sketch_ms": round(t_sketch * 1e3, 3),
+        "paper": "sketch guidance improves quality AND search time"}
+
+
+# ---------------------------------------------------------------------------
+# Row: SYNDICATE — overlap/schedule co-optimization, 1.21-1.74x
+# ---------------------------------------------------------------------------
+
+
+def bench_syndicate_overlap() -> Tuple[float, Dict]:
+    """Best scheduling policy vs no-overlap across three archs (the
+    'jointly optimize schedule+execution' effect)."""
+    shape = SHAPES_BY_NAME["train_4k"]
+    cost = _cost_fn(CostParams(alpha=5e-6, link_bw=10e9))
+    out = {}
+    for arch in ("granite-3-8b", "dbrx-132b", "jamba-1.5-large-398b"):
+        dem = build_demand(get_config(arch), shape, SINGLE_POD_MESH,
+                           DemandParams(grad_chunks=4))
+        serial = simulate_iteration(dem, cost, "serial").jct
+        best = min(simulate_iteration(dem, cost, p).jct
+                   for p in ("fifo", "priority", "slack"))
+        out[arch] = round(serial / best, 3)
+    return max(out.values()), dict(out, paper="1.21x-1.74x")
+
+
+# ---------------------------------------------------------------------------
+# Rows: TPUv4 / TopoOpt — topology matched to traffic
+# ---------------------------------------------------------------------------
+
+
+def bench_topology_match() -> Tuple[float, Dict]:
+    """Ring All-Reduce on matched (torus) vs mismatched (oversubscribed
+    fat-tree) topologies at 256 accelerators (TPUv4/TopoOpt rows)."""
+    n, size = 256, 256 * 2 ** 20
+    task = CommTask("ar", "all_reduce", size, tuple(range(n)))
+    fs = generate_flows(task, "ring")
+    t_torus = simulate_flowset(torus2d(16, 16), fs)
+    ft = fat_tree(num_hosts=n // 8, gpus_per_host=8, oversub=8.0)
+    t_ft = simulate_flowset(ft, fs)
+    return t_ft / t_torus, {
+        "torus_ms": round(t_torus * 1e3, 2),
+        "fattree4x_ms": round(t_ft * 1e3, 2),
+        "paper": "TopoOpt up to 3.4x; TPUv4 torus suits ring collectives"}
+
+
+# ---------------------------------------------------------------------------
+# Row: CASSINI — multi-job staggering
+# ---------------------------------------------------------------------------
+
+
+def bench_cassini_stagger() -> Tuple[float, Dict]:
+    jobs = [JobProfile("jobA", 0.012, 0.008),
+            JobProfile("jobB", 0.010, 0.010)]
+    phases, base, best = stagger_jobs(jobs, grid=6)
+    worst_base = max(base[j.name] / j.period for j in jobs)
+    worst_best = max(best[j.name] / j.period for j in jobs)
+    return worst_base / worst_best, {
+        "unstaggered_slowdown": round(worst_base, 3),
+        "staggered_slowdown": round(worst_best, 3),
+        "phases_s": [round(p, 4) for p in phases],
+        "paper": "staggering peaks recovers contended JCT"}
+
+
+# ---------------------------------------------------------------------------
+# Row: ATP — in-network aggregation
+# ---------------------------------------------------------------------------
+
+
+def bench_atp_aggregation() -> Tuple[float, Dict]:
+    topo = fat_tree(8)
+    task = CommTask("grad", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators[:32]))
+    ps = topo.accelerators[-1]
+    res = atp_traffic(topo, task, ps)
+    degraded = atp_traffic(topo, task, ps, switch_capacity=4)
+    return res["traffic_reduction"], {
+        "traffic_reduction": round(res["traffic_reduction"], 2),
+        "speedup": round(res["speedup"], 2),
+        "degraded_reduction": round(degraded["traffic_reduction"], 2),
+        "paper": "ATP reduces in-network traffic; degrades gracefully"}
+
+
+# ---------------------------------------------------------------------------
+# Motivation: exposed communication fraction (up to 60% at Meta)
+# ---------------------------------------------------------------------------
+
+
+def bench_exposed_comm_fraction() -> Tuple[float, Dict]:
+    shape = SHAPES_BY_NAME["train_4k"]
+    cost = _cost_fn(CP_IB)
+    out = {}
+    for arch in ("granite-3-8b", "qwen2-0.5b", "dbrx-132b",
+                 "deepseek-v2-236b", "jamba-1.5-large-398b"):
+        dem = build_demand(get_config(arch), shape, SINGLE_POD_MESH)
+        r = simulate_iteration(dem, cost, "serial")
+        out[arch] = round(r.exposed_comm / r.jct, 3)
+    return max(out.values()), dict(out, paper="up to 60% of iteration time")
+
+
+ALL_BENCHMARKS = {
+    "megatron_tp_scaling": bench_megatron_tp_scaling,
+    "ptdp_interleaved": bench_ptdp_interleaved,
+    "lina_priority": bench_lina_priority,
+    "janus_data_centric": bench_janus_data_centric,
+    "nccl_selection": bench_nccl_selection,
+    "sccl_synthesis": bench_sccl_synthesis,
+    "taccl_sketch": bench_taccl_sketch,
+    "syndicate_overlap": bench_syndicate_overlap,
+    "topology_match": bench_topology_match,
+    "cassini_stagger": bench_cassini_stagger,
+    "atp_aggregation": bench_atp_aggregation,
+    "exposed_comm_fraction": bench_exposed_comm_fraction,
+}

@@ -1,0 +1,64 @@
+"""§Perf comparison printer: baseline vs hillclimb variants per pair.
+
+    PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "dryrun")
+
+PAIRS = [
+    ("starcoder2-3b", "train_4k"),
+    ("jamba-1.5-large-398b", "decode_32k"),
+    ("deepseek-v2-236b", "train_4k"),
+]
+
+
+def fmt(s):
+    return f"{s:.3f}s" if s >= 0.1 else f"{s*1e3:.1f}ms"
+
+
+def main():
+    for arch, shape in PAIRS:
+        base_fp = os.path.join(RESULTS_DIR, f"{arch}_{shape}_16x16.json")
+        variants = sorted(
+            f for f in glob.glob(os.path.join(
+                RESULTS_DIR, f"{arch}_{shape}_16x16_*.json")))
+        if not os.path.exists(base_fp):
+            print(f"missing baseline for {arch} x {shape}")
+            continue
+        base = json.load(open(base_fp))
+        print(f"\n## {arch} x {shape}")
+        print("| variant | compute | memory | collective | dominant | "
+              "useful | temp GiB | Δdominant |")
+        print("|---|---|---|---|---|---|---|---|")
+
+        def row(r, name, base_dom=None):
+            t = r["roofline"]
+            dom_key = r["dominant"]
+            delta = ""
+            if base_dom is not None:
+                delta = f"{base_dom / t[base_dom_key] :.2f}x" \
+                    if t[base_dom_key] else ""
+            print(f"| {name} | {fmt(t['compute_s'])} | {fmt(t['memory_s'])}"
+                  f" | {fmt(t['collective_s'])} | {dom_key[:-2]} "
+                  f"| {r['useful_flops_ratio']:.2f} "
+                  f"| {r['memory']['temp_size_in_bytes']/2**30:.1f} "
+                  f"| {delta} |")
+
+        base_dom_key = base["dominant"]
+        base_dom = base["roofline"][base_dom_key]
+        row(base, "baseline")
+        for vf in variants:
+            v = json.load(open(vf))
+            name = os.path.basename(vf).split("16x16_")[1][:-5]
+            row(v, name, base_dom)
+
+
+if __name__ == "__main__":
+    main()

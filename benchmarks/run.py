@@ -1,0 +1,37 @@
+"""Benchmark harness: one benchmark per paper table row / claim.
+
+Prints ``name,us_per_call,derived`` CSV (one line per benchmark), where
+``derived`` is the headline metric compared against the survey's reported
+effect, and details go to stderr-style comment lines prefixed with '#'.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.paper_claims import ALL_BENCHMARKS  # noqa: E402
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    results = {}
+    for name, fn in ALL_BENCHMARKS.items():
+        t0 = time.perf_counter()
+        derived, details = fn()
+        dt = (time.perf_counter() - t0) * 1e6
+        print(f"{name},{dt:.1f},{derived:.4g}")
+        print(f"# {name}: {json.dumps(details, default=str)}")
+        results[name] = {"us_per_call": dt, "derived": derived,
+                         "details": details}
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "experiments")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "bench_results.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

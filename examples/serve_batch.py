@@ -1,0 +1,83 @@
+"""Batched serving: prefill a batch of prompts, then decode continuously,
+reporting per-step latency and aggregate tokens/s — the serving-side driver
+(deliverable b).  Works for every architecture family, including the
+attention-free (mamba2) and hybrid (jamba) decode paths.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch mamba2-130m
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, smoke_config
+from repro.data.stubs import audio_frames, vision_patches
+from repro.models import encode, init_cache, init_params
+from repro.serve.step import make_serve_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mamba2-130m", choices=ARCHS)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=48)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    print(f"serving {cfg.name}: batch={args.batch} "
+          f"prompt={args.prompt_len} gen={args.gen_len}")
+
+    context = None
+    if cfg.is_encoder_decoder:
+        context = encode(cfg, params, jnp.asarray(
+            audio_frames(cfg, args.batch)))
+        print(f"  encoder context: {context.shape}")
+    elif cfg.cross_attn_period:
+        context = jnp.asarray(vision_patches(cfg, args.batch))
+        print(f"  vision context: {context.shape}")
+
+    max_len = args.prompt_len + args.gen_len
+    cache = init_cache(cfg, params, args.batch, max_len, context=context)
+    serve = jax.jit(make_serve_step(cfg, temperature=args.temperature))
+
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size)
+    # prefill by feeding the prompt through decode steps (cache-exact)
+    tok = None
+    t0 = time.time()
+    for t in range(args.prompt_len):
+        tok, _, cache = serve(params, cache, prompts[:, t:t + 1], t,
+                              jax.random.fold_in(key, t))
+    prefill_s = time.time() - t0
+
+    outs = []
+    lat = []
+    for t in range(args.prompt_len, max_len):
+        t1 = time.time()
+        tok, _, cache = serve(params, cache, tok, t,
+                              jax.random.fold_in(key, t))
+        tok.block_until_ready()
+        lat.append(time.time() - t1)
+        outs.append(np.asarray(tok[:, 0]))
+    gen = np.stack(outs, axis=1)
+    assert gen.max() < cfg.vocab_size  # padding logits masked
+    total = args.batch * args.gen_len
+    print(f"prefill: {prefill_s*1e3:.1f} ms")
+    print(f"decode:  p50={np.percentile(lat, 50)*1e3:.2f} ms/step  "
+          f"p99={np.percentile(lat, 99)*1e3:.2f} ms/step  "
+          f"throughput={total/sum(lat):,.0f} tok/s")
+    print("sample:", gen[0][:24].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""End-to-end training driver: a ~100M-parameter dense model trained for a
+few hundred steps on the synthetic pipeline, with LR schedule, gradient
+clipping, checkpointing and eval — the (b) deliverable's train driver.
+
+    PYTHONPATH=src python examples/train_100m.py --steps 300
+
+CPU note: ~100M params at seq 256 is a few seconds/step on one core; use
+``--d-model 384 --layers 6 --steps 100`` for a faster demonstration run.
+"""
+import argparse
+import dataclasses
+import math
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.io import restore_checkpoint, save_checkpoint
+from repro.configs import get_config
+from repro.core.types import TrainConfig
+from repro.data.pipeline import SyntheticLM
+from repro.models import init_params
+from repro.optim.adamw import init_opt_state
+from repro.train.step import make_eval_step, make_train_step
+
+
+def build_config(args):
+    """~100M-param member of the qwen2 family (GQA + QKV-bias + SwiGLU)."""
+    base = get_config("qwen2-0.5b")
+    return dataclasses.replace(
+        base, name="qwen2-100m", num_layers=args.layers,
+        d_model=args.d_model, num_heads=args.d_model // 64, num_kv_heads=2,
+        head_dim=64, d_ff=args.d_model * 4, vocab_size=args.vocab,
+        tie_embeddings=True, max_seq_len=args.seq)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--d-model", type=int, default=640)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--vocab", type=int, default=32768)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    ap.add_argument("--eval-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = build_config(args)
+    n = cfg.param_counts()["total"]
+    print(f"model: {cfg.name} = {n/1e6:.1f}M params "
+          f"(L={cfg.num_layers}, d={cfg.d_model}, V={cfg.vocab_size})")
+
+    tcfg = TrainConfig(learning_rate=args.lr, warmup_steps=20,
+                       total_steps=args.steps, grad_clip=1.0, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, tcfg), donate_argnums=(0, 1))
+    evaluate = jax.jit(make_eval_step(cfg))
+
+    # same seed => same bigram permutation; eval uses a held-out epoch so
+    # the sequences (start tokens) differ but the task is the same
+    train_ds = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
+    eval_ds = SyntheticLM(cfg.vocab_size, args.seq, seed=0)
+    eval_batch = {k: jnp.asarray(v)
+                  for k, v in eval_ds.batch(1, 0, args.batch).items()}
+    uniform = math.log(cfg.vocab_size)
+    print(f"uniform-baseline loss = {uniform:.3f}")
+
+    t0 = time.time()
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 train_ds.batch(0, i * args.batch, args.batch).items()}
+        params, opt, m = step(params, opt, batch)
+        if i % 10 == 0 or i == args.steps - 1:
+            tps = (i + 1) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} "
+                  f"gnorm={float(m['grad_norm']):.2f} tok/s={tps:,.0f}")
+        if i and i % args.eval_every == 0:
+            print(f"  eval ce={float(evaluate(params, eval_batch)):.4f}")
+
+    eval_ce = float(evaluate(params, eval_batch))
+    print(f"final eval ce={eval_ce:.4f} (uniform {uniform:.3f})")
+    path = save_checkpoint(args.ckpt_dir, args.steps, params, opt,
+                           extra={"eval_ce": eval_ce})
+    print(f"checkpoint written: {path}")
+    p2, _, s = restore_checkpoint(path, params)
+    assert s == args.steps
+    print("checkpoint restore verified")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Collective Communication Library layer (paper Sec. II-C / III-B).
+
+Three faces of the same layer:
+  * ``algorithms``  — collective algorithms as explicit flow schedules
+                      (ring, bidirectional ring, recursive halving/doubling,
+                      tree, direct all-to-all) usable by the network simulator
+  * ``primitives``  — the same algorithms as executable JAX programs
+                      (shard_map + ppermute), validated against jax.lax psum
+  * ``cost``        — alpha-beta cost models; ``select`` does NCCL-style
+                      auto-selection; ``synth`` does TACCL-style sketch-guided
+                      synthesis on an arbitrary topology
+"""
+from repro.ccl.algorithms import ALGORITHMS, generate_flows  # noqa: F401
+from repro.ccl.cost import algo_cost, CostParams  # noqa: F401
+from repro.ccl.select import select_algorithm  # noqa: F401

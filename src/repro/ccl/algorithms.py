@@ -1,0 +1,283 @@
+"""Collective algorithms as explicit flow schedules.
+
+Each generator takes a CommTask and emits the point-to-point flows of a
+concrete algorithm, step by step — the "CCL generates communication
+traffic" layer of the paper's paradigm.  The network layer (repro.net)
+simulates these flows on a topology; repro.ccl.primitives executes the same
+schedules as shard_map+ppermute JAX programs.
+
+Conventions: ``size_bytes`` on the input task is the per-participant payload
+(e.g. the gradient shard size for All-Reduce).  Flows carry actual wire
+bytes per step.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Sequence
+
+from repro.core.demand import CommTask, Flow, FlowSet
+
+
+def _ring_neighbors(group: Sequence[int]):
+    p = len(group)
+    return [(group[i], group[(i + 1) % p]) for i in range(p)]
+
+
+# ---------------------------------------------------------------------------
+# All-Reduce algorithms
+# ---------------------------------------------------------------------------
+
+
+def ring_all_reduce(task: CommTask) -> FlowSet:
+    """Classic ring: (p-1) reduce-scatter steps + (p-1) all-gather steps,
+    chunk = n/p per step.  Wire bytes per node: 2 n (p-1)/p."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="ring")
+    if p == 1:
+        return fs
+    chunk = task.size_bytes // p
+    step = 0
+    for phase in range(2):  # 0 = reduce-scatter, 1 = all-gather
+        for s in range(p - 1):
+            for src, dst in _ring_neighbors(group):
+                fs.flows.append(Flow(src, dst, chunk, task.task_id, step,
+                                     task.job_id))
+            step += 1
+    fs.num_steps = step
+    return fs
+
+
+def bidir_ring_all_reduce(task: CommTask) -> FlowSet:
+    """Two half-size rings in opposite directions (NCCL-style channels)."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="bidir_ring")
+    if p == 1:
+        return fs
+    chunk = task.size_bytes // (2 * p)
+    step = 0
+    for phase in range(2):
+        for s in range(p - 1):
+            for src, dst in _ring_neighbors(group):
+                fs.flows.append(Flow(src, dst, chunk, task.task_id, step,
+                                     task.job_id))
+                fs.flows.append(Flow(dst, src, chunk, task.task_id, step,
+                                     task.job_id))
+            step += 1
+    fs.num_steps = step
+    return fs
+
+
+def halving_doubling_all_reduce(task: CommTask) -> FlowSet:
+    """Recursive halving (reduce-scatter) + doubling (all-gather):
+    2*log2(p) steps, latency-optimal for small payloads."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="halving_doubling")
+    if p == 1:
+        return fs
+    assert p & (p - 1) == 0, "halving-doubling requires power-of-two group"
+    step = 0
+    # reduce-scatter: exchange halves at distance p/2, p/4, ...
+    dist = p // 2
+    size = task.size_bytes // 2
+    while dist >= 1:
+        for i, node in enumerate(group):
+            peer = group[i ^ dist]
+            fs.flows.append(Flow(node, peer, size, task.task_id, step,
+                                 task.job_id))
+        dist //= 2
+        size //= 2
+        step += 1
+    # all-gather: reverse
+    dist = 1
+    size = task.size_bytes // p
+    while dist < p:
+        for i, node in enumerate(group):
+            peer = group[i ^ dist]
+            fs.flows.append(Flow(node, peer, size, task.task_id, step,
+                                 task.job_id))
+        dist *= 2
+        size *= 2
+        step += 1
+    fs.num_steps = step
+    return fs
+
+
+def tree_all_reduce(task: CommTask) -> FlowSet:
+    """Binary-tree reduce + broadcast: 2*ceil(log2 p) steps of full payload.
+    Latency-friendly; bandwidth cost n*log(p) at the root links."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="tree")
+    if p == 1:
+        return fs
+    depth = math.ceil(math.log2(p))
+    step = 0
+    # reduce towards group[0]
+    stride = 1
+    for _ in range(depth):
+        for i in range(0, p, stride * 2):
+            j = i + stride
+            if j < p:
+                fs.flows.append(Flow(group[j], group[i], task.size_bytes,
+                                     task.task_id, step, task.job_id))
+        stride *= 2
+        step += 1
+    # broadcast back down
+    stride = 2 ** (depth - 1)
+    for _ in range(depth):
+        for i in range(0, p, stride * 2):
+            j = i + stride
+            if j < p:
+                fs.flows.append(Flow(group[i], group[j], task.size_bytes,
+                                     task.task_id, step, task.job_id))
+        stride //= 2
+        step += 1
+    fs.num_steps = step
+    return fs
+
+
+# ---------------------------------------------------------------------------
+# All-Gather / Reduce-Scatter / Broadcast / All-to-All
+# ---------------------------------------------------------------------------
+
+
+def ring_all_gather(task: CommTask) -> FlowSet:
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="ring_ag")
+    chunk = task.size_bytes // max(p, 1)  # size_bytes = TOTAL payload
+    for s in range(p - 1):
+        for src, dst in _ring_neighbors(group):
+            fs.flows.append(Flow(src, dst, chunk, task.task_id, s,
+                                 task.job_id))
+    fs.num_steps = max(p - 1, 0)
+    return fs
+
+
+def ring_reduce_scatter(task: CommTask) -> FlowSet:
+    fs = ring_all_gather(task)
+    fs.algorithm = "ring_rs"
+    return fs
+
+
+def binomial_broadcast(task: CommTask) -> FlowSet:
+    """Binomial-tree broadcast from group[0]: log2(p) steps."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="binomial_bcast")
+    have = [group[0]]
+    step = 0
+    rest = list(group[1:])
+    while rest:
+        senders = list(have)
+        for s in senders:
+            if not rest:
+                break
+            dst = rest.pop(0)
+            fs.flows.append(Flow(s, dst, task.size_bytes, task.task_id, step,
+                                 task.job_id))
+            have.append(dst)
+        step += 1
+    fs.num_steps = step
+    return fs
+
+
+def direct_all_to_all(task: CommTask) -> FlowSet:
+    """Every pair exchanges n/p directly in one logical step (switch fabric)
+    — the MoE dispatch pattern."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="direct_a2a")
+    chunk = task.size_bytes // max(p, 1)
+    for src in group:
+        for dst in group:
+            if src != dst:
+                fs.flows.append(Flow(src, dst, chunk, task.task_id, 0,
+                                     task.job_id))
+    fs.num_steps = 1
+    return fs
+
+
+def ring_all_to_all(task: CommTask) -> FlowSet:
+    """p-1 rounds of neighbor exchange (torus-friendly A2A)."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="ring_a2a")
+    chunk = task.size_bytes // max(p, 1)
+    for s in range(p - 1):
+        for src, dst in _ring_neighbors(group):
+            # at round s the payload is everything still in flight: send the
+            # chunk destined s+1 hops away; wire bytes stay n/p per step
+            fs.flows.append(Flow(src, dst, chunk, task.task_id, s,
+                                 task.job_id))
+    fs.num_steps = max(p - 1, 0)
+    return fs
+
+
+def torus2d_all_reduce(task: CommTask, rows: int = 0) -> FlowSet:
+    """Dimension-ordered 2D-torus All-Reduce (what XLA emits on a TPU pod):
+    ring reduce-scatter along rows, then along columns on the 1/rows
+    shard, then all-gather back in reverse.  Wire bytes/node match the 1D
+    ring (2n(p-1)/p) but the step count drops from 2(p-1) to
+    2(rows-1) + 2(cols-1), and row/column phases use disjoint torus link
+    dimensions.  Assumes ``group`` is laid out row-major rows x cols."""
+    group = task.group
+    p = len(group)
+    if rows <= 0:
+        rows = int(math.isqrt(p))
+    cols = p // rows
+    assert rows * cols == p, (rows, p)
+    fs = FlowSet(task_id=task.task_id, algorithm="torus2d")
+    if p == 1:
+        return fs
+    step = 0
+
+    def ring_pass(groups, chunk, phases, step0):
+        s = step0
+        for _ in range(phases):
+            for g in groups:
+                for i in range(len(g)):
+                    fs.flows.append(Flow(g[i], g[(i + 1) % len(g)], chunk,
+                                         task.task_id, s, task.job_id))
+            s += 1
+        return s
+
+    row_groups = [[group[r * cols + c] for c in range(cols)]
+                  for r in range(rows)]
+    col_groups = [[group[r * cols + c] for r in range(rows)]
+                  for c in range(cols)]
+    # RS along rows: chunks n/cols
+    step = ring_pass(row_groups, task.size_bytes // cols, cols - 1, step)
+    # RS along cols on the row-shard: chunks n/(cols*rows)
+    step = ring_pass(col_groups, task.size_bytes // p, rows - 1, step)
+    # AG along cols, then AG along rows
+    step = ring_pass(col_groups, task.size_bytes // p, rows - 1, step)
+    step = ring_pass(row_groups, task.size_bytes // cols, cols - 1, step)
+    fs.num_steps = step
+    return fs
+
+
+ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
+    "all_reduce": {
+        "ring": ring_all_reduce,
+        "bidir_ring": bidir_ring_all_reduce,
+        "halving_doubling": halving_doubling_all_reduce,
+        "tree": tree_all_reduce,
+        "torus2d": torus2d_all_reduce,
+    },
+    "all_gather": {"ring": ring_all_gather},
+    "reduce_scatter": {"ring": ring_reduce_scatter},
+    "broadcast": {"binomial": binomial_broadcast},
+    "all_to_all": {"direct": direct_all_to_all, "ring": ring_all_to_all},
+}
+
+
+def generate_flows(task: CommTask, algorithm: str) -> FlowSet:
+    prims = ALGORITHMS[task.primitive]
+    if algorithm not in prims:
+        raise KeyError(f"{algorithm!r} not available for {task.primitive}; "
+                       f"have {list(prims)}")
+    return prims[algorithm](task)

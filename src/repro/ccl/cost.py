@@ -1,0 +1,59 @@
+"""Alpha-beta cost models for collective algorithms.
+
+cost = num_steps * alpha + wire_bytes_on_critical_path / beta_effective.
+
+These closed forms are the classical ones (Thakur et al.; NCCL docs) and
+are validated in tests against the flow-schedule generators in
+``repro.ccl.algorithms`` (the per-step max-link bytes of the generated
+schedule must equal the closed form's bandwidth term).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CostParams:
+    alpha: float = 5e-6          # per-step latency (s)
+    link_bw: float = 50e9        # bytes/s per link
+    reduce_flops_bw: float = 0.0  # 0 = ignore reduction compute
+
+
+def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
+              cp: CostParams) -> float:
+    """Predicted completion time (seconds) of one collective."""
+    n = float(size_bytes)
+    a, b = cp.alpha, cp.link_bw
+    if p <= 1:
+        return 0.0
+    if primitive == "all_reduce":
+        if algorithm == "ring":
+            return 2 * (p - 1) * a + 2 * (p - 1) / p * n / b
+        if algorithm == "bidir_ring":
+            return 2 * (p - 1) * a + (p - 1) / p * n / b
+        if algorithm == "halving_doubling":
+            return 2 * math.log2(p) * a + 2 * (p - 1) / p * n / b
+        if algorithm == "tree":
+            return 2 * math.ceil(math.log2(p)) * (a + n / b)
+        if algorithm == "torus2d":
+            # dimension-ordered on a sqrt(p) x sqrt(p) torus: same wire
+            # bytes as ring, far fewer latency steps
+            r = max(int(math.isqrt(p)), 1)
+            c = p // r
+            steps = 2 * (r - 1) + 2 * (c - 1)
+            return steps * a + 2 * (p - 1) / p * n / b
+    if primitive in ("all_gather", "reduce_scatter"):
+        # n = TOTAL payload (the gathered size / the pre-reduce size)
+        if algorithm == "ring":
+            return (p - 1) * a + (p - 1) / p * n / b
+    if primitive == "broadcast":
+        if algorithm == "binomial":
+            return math.ceil(math.log2(p)) * (a + n / b)
+    if primitive == "all_to_all":
+        if algorithm == "direct":
+            # p-1 simultaneous flows share the NIC: serialized on egress
+            return a + (p - 1) / p * n / b
+        if algorithm == "ring":
+            return (p - 1) * a + (p - 1) / p * n / b
+    raise KeyError(f"no cost model for {primitive}/{algorithm}")

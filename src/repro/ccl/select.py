@@ -1,0 +1,32 @@
+"""NCCL-style algorithm auto-selection.
+
+NCCL "dynamically selects established algorithms based on different
+situations" (paper Sec. III-B): small payloads favour latency-optimal
+algorithms (tree / halving-doubling), large payloads favour bandwidth-
+optimal rings.  We reproduce that behaviour with the alpha-beta models and
+expose the crossover — benchmarks/collectives.py plots it per topology.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.ccl.algorithms import ALGORITHMS
+from repro.ccl.cost import CostParams, algo_cost
+
+
+def select_algorithm(primitive: str, size_bytes: int, p: int,
+                     cp: CostParams,
+                     allow: Optional[Tuple[str, ...]] = None
+                     ) -> Tuple[str, float, Dict[str, float]]:
+    """Returns (best_algorithm, predicted_cost, all_costs)."""
+    costs = {}
+    for name in ALGORITHMS[primitive]:
+        if allow and name not in allow:
+            continue
+        if name == "halving_doubling" and p & (p - 1):
+            continue  # needs power-of-two
+        if name == "torus2d" and int(p ** 0.5) ** 2 != p:
+            continue  # needs a square grid layout
+        costs[name] = algo_cost(primitive, name, size_bytes, p, cp)
+    best = min(costs, key=costs.get)
+    return best, costs[best], costs

@@ -1,0 +1,69 @@
+"""Checkpointing: msgpack-framed numpy pytree save/restore with step metadata.
+
+Layout: <dir>/step_<n>/{manifest.msgpack, arrays.npz}.  Arrays are gathered
+to host (fine at the model sizes the examples train); the manifest stores
+the pytree structure so restore rebuilds the exact pytree.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    flat = {}
+    for kp, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        flat[key] = np.asarray(leaf)
+    return flat, jax.tree_util.tree_structure(tree)
+
+
+def save_checkpoint(ckpt_dir: str, step: int, params: Any,
+                    opt_state: Optional[Any] = None,
+                    extra: Optional[Dict] = None) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(path, exist_ok=True)
+    blobs = {}
+    manifest: Dict[str, Any] = {"step": step, "extra": extra or {}}
+    for name, tree in (("params", params), ("opt_state", opt_state)):
+        if tree is None:
+            continue
+        flat, _ = _flatten(tree)
+        manifest[name + "_keys"] = sorted(flat)
+        for k, v in flat.items():
+            blobs[f"{name}/{k}"] = v
+    np.savez(os.path.join(path, "arrays.npz"), **blobs)
+    with open(os.path.join(path, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    return path
+
+
+def _unflatten_like(template: Any, flat: Dict[str, np.ndarray], prefix: str):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for kp, leaf in leaves:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in kp)
+        arr = flat[f"{prefix}/{key}"]
+        out.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def restore_checkpoint(path: str, params_template: Any,
+                       opt_template: Optional[Any] = None
+                       ) -> Tuple[Any, Optional[Any], int]:
+    with open(os.path.join(path, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    npz = np.load(os.path.join(path, "arrays.npz"))
+    flat = {k: npz[k] for k in npz.files}
+    params = _unflatten_like(params_template, flat, "params")
+    opt = None
+    if opt_template is not None:
+        opt = _unflatten_like(opt_template, flat, "opt_state")
+    return params, opt, int(manifest["step"])

@@ -1,0 +1,2 @@
+"""Assigned architecture configs (10) + input shapes + registry."""
+from repro.configs.registry import ARCHS, get_config, list_archs, smoke_config  # noqa: F401

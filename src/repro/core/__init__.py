@@ -1,0 +1,23 @@
+"""Core: shared types + the five-layer paradigm's cross-layer interfaces."""
+from repro.core.types import (  # noqa: F401
+    INPUT_SHAPES,
+    LONG_500K,
+    DECODE_32K,
+    MULTI_POD_MESH,
+    PREFILL_32K,
+    SHAPES_BY_NAME,
+    SINGLE_POD_MESH,
+    TRAIN_4K,
+    LayerSpec,
+    MeshConfig,
+    ModelConfig,
+    ShapeConfig,
+    TrainConfig,
+)
+from repro.core.demand import (  # noqa: F401
+    CommDemand,
+    CommTask,
+    ComputeTask,
+    Flow,
+    FlowSet,
+)

@@ -1,0 +1,188 @@
+"""CommDemand builder: parallelization strategy -> iteration task graph.
+
+This is the quantitative bridge between the model/strategy layer and the
+scheduler/CCL/network layers (the downward red arrow in Fig. 5a): given a
+ModelConfig, a workload shape and a mesh, emit the compute tasks and the
+collective tasks of ONE training iteration with their dependency edges and
+sizes.  The schedulers and several benchmarks consume this.
+
+Traffic sizes follow the classical accounting (all bf16 activations / f32
+gradient sync unless stated):
+  * Megatron TP: one All-Reduce of (B,S,d) per block per direction [7]
+  * DP: one gradient sync (AR or RS+AG) per layer bucket
+  * MoE EP: All-to-All dispatch+combine of the capacity buffers (fwd and
+    bwd each) — the Lina/Janus bottleneck traffic
+  * PP: p2p activation transfer per microbatch boundary
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+from repro.core import hw
+from repro.core.demand import CommDemand, CommTask, ComputeTask
+from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class DemandParams:
+    mfu: float = 0.5              # assumed compute efficiency
+    act_bytes: int = 2            # bf16 activations
+    grad_bytes: int = 4           # f32 gradient sync
+    zero1: bool = True            # reduce-scatter instead of all-reduce
+    capacity_factor: float = 1.25
+    grad_chunks: int = 1          # Lina-style splitting of gradient sync
+
+
+def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
+                 dp_params: DemandParams = DemandParams()) -> CommDemand:
+    tp = mesh.tp
+    dp = mesh.dp
+    chips = mesh.num_devices
+    tokens = shape.global_batch * shape.seq_len
+    tokens_dev = tokens / chips  # per-device tokens (seq+batch sharded)
+    d = cfg.d_model
+    peak = hw.PEAK_FLOPS_BF16 * dp_params.mfu
+
+    demand = CommDemand(job_id=f"{cfg.name}:{shape.name}")
+    specs = cfg.layer_specs()
+    pc = cfg.param_counts()
+    per_layer_params = []
+    moe_dff = cfg.moe_d_ff or cfg.d_ff
+
+    def layer_active_params(spec) -> float:
+        total = 0.0
+        hd = cfg.resolved_head_dim
+        if spec.mixer in ("attn", "cross_attn"):
+            if cfg.attention == "mla":
+                total += (d * cfg.q_lora_rank
+                          + cfg.q_lora_rank * cfg.num_heads
+                          * (hd + cfg.qk_rope_head_dim)
+                          + d * (cfg.kv_lora_rank + cfg.qk_rope_head_dim)
+                          + cfg.kv_lora_rank * cfg.num_heads * 2 * hd
+                          + cfg.num_heads * hd * d)
+            else:
+                total += d * hd * (cfg.num_heads * 2 + cfg.num_kv_heads * 2)
+        else:
+            din = cfg.ssm_d_inner
+            total += d * (2 * din + 2 * cfg.ssm_state + cfg.ssm_num_heads) \
+                + din * d
+        mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+        if spec.ffn == "dense":
+            total += mult * d * cfg.d_ff
+        elif spec.ffn == "moe":
+            total += mult * d * moe_dff * (cfg.top_k
+                                           + cfg.num_shared_experts)
+        return total
+
+    def layer_total_params(spec) -> float:
+        """Gradient-sync size: ALL resident params (every expert), not the
+        top-k active subset."""
+        total = layer_active_params(spec)
+        if spec.ffn == "moe":
+            mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+            total += mult * d * moe_dff * (cfg.num_experts - cfg.top_k)
+        return total
+
+    # ---------------- forward ----------------
+    mult = {"train": (2, 4), "prefill": (2, 0), "decode": (2, 0)}[shape.kind]
+    fwd_mult, bwd_mult = mult
+    tp_ar_bytes = int(tokens_dev * tp * d * dp_params.act_bytes)
+
+    for i, spec in enumerate(specs):
+        ap = layer_active_params(spec)
+        per_layer_params.append(ap)
+        flops_dev = fwd_mult * ap * tokens / chips
+        demand.compute_tasks.append(ComputeTask(
+            f"fwd{i}", flops_dev, flops_dev / peak, demand.job_id))
+        if tp > 1:
+            demand.comm_tasks.append(CommTask(
+                f"tp_fwd{i}", "all_reduce", tp_ar_bytes,
+                tuple(range(tp)), after_compute=(f"fwd{i}",),
+                before_compute=f"fwd{i+1}" if i + 1 < len(specs) else "head",
+                job_id=demand.job_id))
+        if spec.ffn == "moe" and tp > 1:
+            a2a = int(tokens_dev * cfg.top_k * d * dp_params.act_bytes
+                      * dp_params.capacity_factor)
+            demand.comm_tasks.append(CommTask(
+                f"a2a_fwd{i}", "all_to_all", 2 * a2a,  # dispatch+combine
+                tuple(range(tp)), after_compute=(f"fwd{i}",),
+                before_compute=f"fwd{i+1}" if i + 1 < len(specs) else "head",
+                job_id=demand.job_id))
+
+    head_flops = fwd_mult * cfg.padded_vocab * d * tokens / chips
+    demand.compute_tasks.append(ComputeTask(
+        "head", head_flops, head_flops / peak, demand.job_id))
+
+    if shape.kind != "train":
+        return demand
+
+    # ---------------- backward ----------------
+    for i in reversed(range(len(specs))):
+        spec = specs[i]
+        flops_dev = bwd_mult * per_layer_params[i] * tokens / chips
+        demand.compute_tasks.append(ComputeTask(
+            f"bwd{i}", flops_dev, flops_dev / peak, demand.job_id))
+        if tp > 1:
+            demand.comm_tasks.append(CommTask(
+                f"tp_bwd{i}", "all_reduce", tp_ar_bytes,
+                tuple(range(tp)), after_compute=(f"bwd{i}",),
+                before_compute=f"bwd{i-1}" if i else "opt",
+                job_id=demand.job_id))
+        if spec.ffn == "moe" and tp > 1:
+            a2a = int(tokens_dev * cfg.top_k * d * dp_params.act_bytes
+                      * dp_params.capacity_factor)
+            demand.comm_tasks.append(CommTask(
+                f"a2a_bwd{i}", "all_to_all", 2 * a2a,
+                tuple(range(tp)), after_compute=(f"bwd{i}",),
+                before_compute=f"bwd{i-1}" if i else "opt",
+                job_id=demand.job_id))
+        if dp > 1:
+            # gradient sync: overlappable (blocks only the optimizer);
+            # slack = how much bwd compute remains to hide behind
+            grad_bytes = int(layer_total_params(spec) / tp
+                             * dp_params.grad_bytes)
+            prim = "reduce_scatter" if dp_params.zero1 else "all_reduce"
+            remaining = sum(per_layer_params[:i]) * bwd_mult \
+                * tokens / chips / peak
+            nchunks = max(1, dp_params.grad_chunks)
+            for ci in range(nchunks):
+                demand.comm_tasks.append(CommTask(
+                    f"grad{i}.{ci}", prim, grad_bytes // nchunks,
+                    tuple(range(dp)), after_compute=(f"bwd{i}",),
+                    before_compute="opt", slack=remaining,
+                    job_id=demand.job_id))
+
+    opt_flops = 10 * pc["total"] / chips  # elementwise AdamW
+    demand.compute_tasks.append(ComputeTask(
+        "opt", opt_flops, opt_flops / peak, demand.job_id))
+    return demand
+
+
+def janus_traffic_ratio(cfg: ModelConfig, shape: ShapeConfig,
+                        mesh: MeshConfig) -> dict:
+    """Janus [10] data-centric vs expert-centric MoE traffic.
+
+    Expert-centric (classic EP): every MoE layer moves 2x the routed token
+    activations through All-to-All, fwd + bwd.
+    Data-centric (Janus): moves the EXPERT WEIGHTS to the data instead —
+    each device fetches the experts it lacks once per layer (prefetchable,
+    and sharable across the DP group via broadcast).
+    """
+    tokens = shape.global_batch * shape.seq_len
+    chips = mesh.num_devices
+    d = cfg.d_model
+    moe_layers = sum(1 for s in cfg.layer_specs() if s.ffn == "moe")
+    mult = 3 if cfg.ffn_act in ("swiglu", "geglu") else 2
+    expert_params = mult * d * (cfg.moe_d_ff or cfg.d_ff)
+
+    # per-device, per-layer bytes
+    token_bytes = 4 * (tokens / chips) * cfg.top_k * d * 2  # a2a x2, fwd+bwd
+    expert_bytes = (cfg.num_experts / chips) * expert_params * 2 \
+        * (chips - 1) / chips * 2  # fetch all non-local experts (bf16)
+
+    return {
+        "expert_centric_bytes": token_bytes * moe_layers,
+        "data_centric_bytes": expert_bytes * moe_layers,
+        "ratio": (token_bytes / expert_bytes) if expert_bytes else float("inf"),
+    }

@@ -1,0 +1,5 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLM,
+    make_batches,
+)
+from repro.data.stubs import audio_frames, vision_patches  # noqa: F401

@@ -1,0 +1,26 @@
+"""Modality frontends — STUBS by design (the one allowed carve-out).
+
+[audio]: the mel-spectrogram + conv feature extractor is not implemented;
+``audio_frames`` provides precomputed frame embeddings of the right shape.
+[vlm]: the ViT/SigLIP vision encoder + projector is not implemented;
+``vision_patches`` provides precomputed patch embeddings.
+
+Both are seeded and deterministic so smoke tests / examples are stable.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ModelConfig
+
+
+def audio_frames(cfg: ModelConfig, batch: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 7]))
+    return (rng.standard_normal(
+        (batch, cfg.num_audio_frames, cfg.d_model)) * 0.02).astype(np.float32)
+
+
+def vision_patches(cfg: ModelConfig, batch: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, 11]))
+    return (rng.standard_normal(
+        (batch, cfg.num_vision_tokens, cfg.d_model)) * 0.02).astype(np.float32)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, H, Sq, D); k, v: (B, KV, Sk, D). Materialized softmax."""
+    b, h, sq, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    qg = q.reshape(b, kv, g, sq, d)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v)
+    return o.reshape(b, h, sq, d).astype(q.dtype)

@@ -1,0 +1,94 @@
+"""Mamba2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the GPU selective-scan: the chunked *dual form* turns the
+recurrence into (Q x Q) and (Q x N)/(N x P) matmuls per chunk (MXU work),
+with only the inter-chunk state carried sequentially.  The carry state
+(P x N per head) lives in VMEM scratch and persists across the sequential
+chunk grid dimension — the Pallas analogue of the fused CUDA scan's
+register-resident state (DESIGN.md hardware-adaptation note).
+
+Layouts: x (B, H, L, P), dt (B, H, L), a (H,), b/c (B, L, N) (group-
+broadcast over heads).  Output y (B, H, L, P).
+Grid: (B, H, L/Q) with the chunk dimension sequential.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, h_ref, *,
+                q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0].astype(jnp.float32)             # scalar
+    bmat = b_ref[0].astype(jnp.float32)          # (Q, N)
+    cmat = c_ref[0].astype(jnp.float32)          # (Q, N)
+
+    da = dt * a                                  # (Q,)
+    cs = jnp.cumsum(da)                          # (Q,)
+    # intra-chunk decay matrix L[i,j] = exp(cs_i - cs_j) for j <= i
+    diff = cs[:, None] - cs[None, :]
+    tril = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmat = jnp.where(tril, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(cmat, bmat, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    w = scores * lmat * dt[None, :]              # (Q, Q)
+    y_diag = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk contribution from the carried state
+    decay_in = jnp.exp(cs)                       # (Q,)
+    h_prev = h_ref[...]                          # (P, N)
+    y_off = jax.lax.dot_general(cmat, h_prev, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_ref[0, 0] = (y_diag + y_off * decay_in[:, None]).astype(y_ref.dtype)
+
+    # state update: h = h * exp(sum da) + x^T @ (b * decay_out * dt)
+    decay_out = jnp.exp(cs[-1] - cs)             # (Q,)
+    bw = bmat * (decay_out * dt)[:, None]        # (Q, N)
+    state = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    h_ref[...] = h_prev * jnp.exp(cs[-1]) + state
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(x, dt, a, b, c, *, chunk: int = 128,
+                    interpret: bool = True):
+    """x: (B,H,L,P); dt: (B,H,L); a: (H,); b,c: (B,L,N) -> y (B,H,L,P)."""
+    bsz, h, l, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    assert l % q == 0
+    nc = l // q
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, q, p), lambda ib, ih, ic: (ib, ih, ic, 0)),
+            pl.BlockSpec((1, 1, q), lambda ib, ih, ic: (ib, ih, ic)),
+            pl.BlockSpec((1,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, q, n), lambda ib, ih, ic: (ib, ic, 0)),
+            pl.BlockSpec((1, q, n), lambda ib, ih, ic: (ib, ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q, p),
+                               lambda ib, ih, ic: (ib, ih, ic, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c)

@@ -1,0 +1,386 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# isort: split  — the two lines above MUST run before any jax import: jax
+# locks the device count on first init, and the dry-run needs 512
+# placeholder host devices to build the production meshes.
+import argparse
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.core import hw
+from repro.core.types import (INPUT_SHAPES, MULTI_POD_MESH, SHAPES_BY_NAME,
+                              SINGLE_POD_MESH, ModelConfig, ShapeConfig,
+                              TrainConfig)
+from repro.launch.analysis import (cost_summary, memory_summary,
+                                   parse_collectives)
+from repro.launch.mesh import make_production_mesh, mesh_config
+from repro.launch.specs import (cache_shapes, decode_window, input_specs,
+                                uses_swa_variant)
+from repro.models.transformer import decode_step, forward, init_params
+from repro.optim.adamw import init_opt_state
+from repro.parallel.planner import (apply_fsdp, batch_specs, cache_specs,
+                                    guarded, make_ctx, param_specs,
+                                    zero1_spec)
+from repro.train.step import make_train_step
+
+FSDP_THRESHOLD_BYTES = 4 * 2 ** 30  # params/device above this -> FSDP
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _bspec(mcfg):
+    axes = tuple(mcfg.data_axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _shard(mesh, spec):
+    return NamedSharding(mesh, spec)
+
+
+def build_dryrun(arch: str, shape_name: str, *, multi_pod: bool = False,
+                 fsdp: Optional[bool] = None, causal_skip: bool = False,
+                 remat: Optional[bool] = None, unroll: bool = False,
+                 microbatches: int = 1, grad_dtype: str = "f32",
+                 pad_heads: bool = False, ws_decode: bool = False,
+                 cfg_override: Optional[ModelConfig] = None,
+                 extra_notes: Optional[list] = None):
+    """Lower one (arch x shape x mesh) combination. Returns (lowered, meta)."""
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if pad_heads:
+        # §Perf: pad query heads up to the TP degree so attention shards
+        # (zero-init extra heads are function-preserving at init time)
+        import dataclasses
+        tp0 = (MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH).tp
+        new_h = ((cfg.num_heads + tp0 - 1) // tp0) * tp0
+        cfg = dataclasses.replace(cfg, num_heads=new_h,
+                                  head_dim=cfg.resolved_head_dim)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mcfg = mesh_config(multi_pod=multi_pod)
+    notes = extra_notes if extra_notes is not None else []
+
+    pspecs = param_specs(cfg, mcfg, notes)
+    params_shapes = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+    param_bytes = sum(l.size * l.dtype.itemsize
+                      for l in jax.tree.leaves(params_shapes))
+    tp = mcfg.tp
+    if fsdp is None:
+        fsdp = param_bytes / tp > FSDP_THRESHOLD_BYTES
+    if fsdp:
+        pspecs = apply_fsdp(pspecs, params_shapes, mcfg)
+        notes.append(f"fsdp=True (param_bytes/tp = "
+                     f"{param_bytes / tp / 2**30:.1f} GiB)")
+
+    if remat is None:
+        remat = shape.kind == "train"
+    # unroll layer scans: XLA's cost analysis visits while bodies once, so
+    # scanned stacks under-count FLOPs/collectives by ~num_layers; unrolled
+    # modules give exact counts (compile is slower but still minutes).
+    ctx = make_ctx(mesh, mcfg, remat=remat, causal_skip=causal_skip,
+                   unroll_layers=unroll)
+    ctx.ep_weight_stationary = ws_decode
+    p_sh = jax.tree.map(lambda sp: _shard(mesh, sp), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+    ins = input_specs(cfg, shape)
+    b = _bspec(mcfg)
+
+    def in_shard(name, sds):
+        if name == "pos":
+            return _shard(mesh, P())
+        axes = (b,) + (None,) * (len(sds.shape) - 1)
+        return _shard(mesh, guarded(sds.shape, axes, mcfg, notes,
+                                    what=f"input:{name}"))
+
+    meta: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "kind": shape.kind, "fsdp": bool(fsdp),
+        "swa_variant": uses_swa_variant(cfg, shape),
+        "causal_skip": causal_skip,
+        "param_bytes": param_bytes,
+        "notes": list(notes),
+    }
+
+    if shape.kind == "train":
+        tcfg = TrainConfig(microbatches=microbatches, grad_dtype=grad_dtype)
+        opt_shapes = jax.eval_shape(init_opt_state, params_shapes)
+        opt_specs = {
+            "m": jax.tree.map(
+                lambda sp, sh: zero1_spec(sp, sh.shape, mcfg), pspecs,
+                opt_shapes["m"], is_leaf=lambda x: isinstance(x, P)),
+            "v": jax.tree.map(
+                lambda sp, sh: zero1_spec(sp, sh.shape, mcfg), pspecs,
+                opt_shapes["v"], is_leaf=lambda x: isinstance(x, P)),
+            "step": P(),
+        }
+        o_sh = jax.tree.map(lambda sp: _shard(mesh, sp), opt_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+        batch_sh = {k: in_shard(k, v) for k, v in ins.items()}
+        step_fn = make_train_step(cfg, tcfg, ctx)
+        jitted = jax.jit(step_fn, in_shardings=(p_sh, o_sh, batch_sh))
+        lowered = jitted.lower(params_shapes, opt_shapes, ins)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        batch_sh = {k: in_shard(k, v) for k, v in ins.items()}
+
+        def prefill_fn(params, batch):
+            logits, _ = forward(cfg, params, batch["tokens"],
+                                context=batch.get("context"), ctx=ctx)
+            return logits
+
+        jitted = jax.jit(prefill_fn, in_shardings=(p_sh, batch_sh))
+        lowered = jitted.lower(params_shapes, ins)
+        return lowered, meta
+
+    # ---- decode ----
+    win = decode_window(cfg, shape)
+    c_shapes = cache_shapes(cfg, shape, params_shapes)
+    c_specs = cache_specs(cfg, mcfg, shape.global_batch, c_shapes, notes)
+    c_sh = jax.tree.map(lambda sp: _shard(mesh, sp), c_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    tok_sh = in_shard("tokens", ins["tokens"])
+    pos_sh = _shard(mesh, P())
+
+    def decode_fn(params, cache, tokens, pos):
+        return decode_step(cfg, params, cache, tokens, pos, ctx=ctx,
+                           window=win)
+
+    jitted = jax.jit(decode_fn,
+                     in_shardings=(p_sh, c_sh, tok_sh, pos_sh))
+    lowered = jitted.lower(params_shapes, c_shapes, ins["tokens"],
+                           ins["pos"])
+    meta["cache_bytes"] = sum(l.size * l.dtype.itemsize
+                              for l in jax.tree.leaves(c_shapes))
+    return lowered, meta
+
+
+# ---------------------------------------------------------------------------
+# Exact cost accounting via reduced-depth unrolled variants
+# ---------------------------------------------------------------------------
+#
+# XLA's cost analysis visits a while-loop body ONCE, so the full-depth scan
+# module under-counts FLOPs/bytes/collectives by ~num_layers.  Unrolling the
+# full stack is exact but compiles for tens of minutes at 100 layers.
+# Instead we compile tiny unrolled variants (last layer-group at 1 and 2
+# repeats; encoder at 1 and 2 layers) and extrapolate linearly — exact,
+# because repeated layers are structurally identical.
+
+
+def _cost_vector(compiled) -> Dict[str, float]:
+    cost = cost_summary(compiled)
+    coll = parse_collectives(compiled.as_text())
+    vec = {"flops": cost["flops"], "bytes": cost["bytes"],
+           "transcendentals": cost["transcendentals"],
+           "collective_bytes": float(coll.total_bytes)}
+    for k, v in coll.bytes_by_kind.items():
+        vec[f"coll_{k}"] = float(v)
+    for k, v in coll.count_by_kind.items():
+        vec[f"count_{k}"] = float(v)
+    return vec
+
+
+def _vec_add(a, b, scale=1.0):
+    keys = set(a) | set(b)
+    return {k: a.get(k, 0.0) + scale * b.get(k, 0.0) for k in keys}
+
+
+def _reduced(cfg: ModelConfig, last_repeats: int,
+             encoder_layers: Optional[int] = None) -> ModelConfig:
+    import dataclasses
+    groups = cfg.layer_groups()
+    assert all(r == 1 for _, r in groups[:-1]), \
+        "cost extrapolation assumes only the last group repeats"
+    n = sum(len(p) for p, _ in groups[:-1]) + len(groups[-1][0]) * last_repeats
+    kw = {"num_layers": n}
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = (encoder_layers if encoder_layers is not None
+                                else 1)
+    return dataclasses.replace(cfg, **kw)
+
+
+def measure_costs(arch: str, shape_name: str, *, multi_pod: bool = False,
+                  fsdp: Optional[bool] = None, **kw) -> Dict[str, float]:
+    """Exact whole-model cost vector via reduced-depth unrolled compiles."""
+    cfg = get_config(arch)
+    # pin fsdp from the full-size config so variants shard identically
+    if fsdp is None:
+        params_shapes = jax.eval_shape(
+            lambda: init_params(cfg, jax.random.PRNGKey(0),
+                                dtype=jnp.bfloat16))
+        pb = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree.leaves(params_shapes))
+        fsdp = pb / mesh_config(multi_pod=multi_pod).tp > FSDP_THRESHOLD_BYTES
+
+    def compile_cost(c):
+        lowered, _ = build_dryrun(arch, shape_name, multi_pod=multi_pod,
+                                  fsdp=fsdp, unroll=True, cfg_override=c,
+                                  **kw)
+        return _cost_vector(lowered.compile())
+
+    last_r = cfg.layer_groups()[-1][1]
+    base = compile_cost(_reduced(cfg, 1))
+    total = dict(base)
+    if last_r > 1:
+        var = compile_cost(_reduced(cfg, 2))
+        per_layer = _vec_add(var, base, scale=-1.0)
+        total = _vec_add(total, per_layer, scale=float(last_r - 1))
+    if cfg.is_encoder_decoder and cfg.encoder_layers > 1:
+        var_e = compile_cost(_reduced(cfg, 1, encoder_layers=2))
+        per_enc = _vec_add(var_e, base, scale=-1.0)
+        total = _vec_add(total, per_enc, scale=float(cfg.encoder_layers - 1))
+    return total
+
+
+def analyse(meta, mem, costs) -> Dict[str, Any]:
+    cfg = get_config(meta["arch"])
+    shape = SHAPES_BY_NAME[meta["shape"]]
+    chips = 512 if meta["mesh"] == "2x16x16" else 256
+
+    terms = hw.roofline_seconds(costs["flops"], costs["bytes"],
+                                costs["collective_bytes"], chips=1)
+    dominant = max(terms, key=terms.get)
+
+    pc = cfg.param_counts()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6 * pc["active"] * tokens  # fwd+bwd
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2 * pc["active"] * tokens
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        model_flops = 2 * pc["active"] * tokens
+    useful_ratio = model_flops / max(costs["flops"] * chips, 1.0)
+
+    return dict(
+        meta,
+        chips=chips,
+        flops_per_device=costs["flops"],
+        bytes_per_device=costs["bytes"],
+        transcendentals=costs["transcendentals"],
+        collective_bytes_per_device=costs["collective_bytes"],
+        collectives_by_kind={k[5:]: v for k, v in costs.items()
+                             if k.startswith("coll_")},
+        collective_counts={k[6:]: v for k, v in costs.items()
+                           if k.startswith("count_")},
+        memory=mem,
+        roofline=terms,
+        dominant=dominant,
+        model_flops=model_flops,
+        useful_flops_ratio=useful_ratio,
+    )
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            save: bool = True, verbose: bool = True, skip_costs: bool = False,
+            **kw) -> Dict[str, Any]:
+    # 1) full-depth scan module: proves the combination lowers+compiles on
+    #    the production mesh, and yields the per-device memory picture.
+    t0 = time.time()
+    lowered, meta = build_dryrun(arch, shape_name, multi_pod=multi_pod, **kw)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = memory_summary(compiled)
+    if verbose:
+        print(compiled.memory_analysis())
+    # 2) exact cost vector from reduced-depth unrolled variants.
+    if skip_costs:
+        costs = _cost_vector(compiled)
+    else:
+        costs = measure_costs(arch, shape_name, multi_pod=multi_pod, **kw)
+    t3 = time.time()
+    result = analyse(meta, mem, costs)
+    result["lower_s"] = round(t1 - t0, 2)
+    result["compile_s"] = round(t2 - t1, 2)
+    result["cost_measure_s"] = round(t3 - t2, 2)
+    if verbose:
+        print({k: costs.get(k) for k in ("flops", "bytes",
+                                         "transcendentals",
+                                         "collective_bytes")})
+        r = result["roofline"]
+        print(f"[{arch} x {shape_name} x {result['mesh']}] "
+              f"compute={r['compute_s']*1e3:.2f}ms "
+              f"memory={r['memory_s']*1e3:.2f}ms "
+              f"collective={r['collective_s']*1e3:.2f}ms "
+              f"dominant={result['dominant']} "
+              f"useful={result['useful_flops_ratio']:.2f} "
+              f"temp={mem['temp_size_in_bytes']/2**30:.2f}GiB "
+              f"(lower {result['lower_s']}s compile {result['compile_s']}s "
+              f"costs {result['cost_measure_s']}s)")
+    if save:
+        os.makedirs(RESULTS_DIR, exist_ok=True)
+        def _default(v):
+            # identity-safe default check (True == 1 in Python!)
+            return v is None or v is False or v == "f32" or \
+                (v == 1 and v is not True)
+
+        tag = f"{arch}_{shape_name}_{result['mesh']}"
+        for k, v in sorted(kw.items()):
+            if not _default(v):
+                tag += f"_{k}-{v}"
+        result["variant_kwargs"] = {k: v for k, v in kw.items()
+                                    if not _default(v)}
+        with open(os.path.join(RESULTS_DIR, tag + ".json"), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=[s.name for s in INPUT_SHAPES] + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--causal-skip", action="store_true")
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true",
+                    help="lower+compile+memory only (no cost extrapolation)"
+                         " — used for the multi-pod lowering proof")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combinations whose result JSON exists")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else [s.name for s in INPUT_SHAPES]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                if args.resume:
+                    mesh_tag = "2x16x16" if mp else "16x16"
+                    fp = os.path.join(RESULTS_DIR,
+                                      f"{arch}_{shape}_{mesh_tag}.json")
+                    if os.path.exists(fp):
+                        print(f"skip (exists): {arch} x {shape} x {mesh_tag}")
+                        continue
+                try:
+                    run_one(arch, shape, multi_pod=mp,
+                            causal_skip=args.causal_skip,
+                            skip_costs=args.skip_costs,
+                            save=not args.no_save)
+                except Exception as e:  # noqa: BLE001 — report and continue
+                    failures.append((arch, shape, mp, repr(e)[:200]))
+                    print(f"FAIL [{arch} x {shape} x mp={mp}]: {e!r}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall dry-runs passed")
+
+
+if __name__ == "__main__":
+    main()

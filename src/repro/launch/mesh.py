@@ -1,0 +1,29 @@
+"""Production mesh construction.
+
+Functions, not module-level constants: importing this module never touches
+jax device state (the dry-run sets XLA_FLAGS before any jax import)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.types import MULTI_POD_MESH, SINGLE_POD_MESH, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    return MULTI_POD_MESH if multi_pod else SINGLE_POD_MESH
+
+
+def make_smoke_mesh():
+    """1x1 mesh with production axis names — the EP shard_map path runs
+    unchanged on a single device (all_to_all over a size-1 axis)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def smoke_mesh_config() -> MeshConfig:
+    return MeshConfig(shape=(1, 1))

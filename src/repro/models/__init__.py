@@ -1,0 +1,8 @@
+"""Model zoo: pure-JAX modules covering all 10 assigned architectures."""
+from repro.models.transformer import (  # noqa: F401
+    forward,
+    init_cache,
+    init_params,
+    decode_step,
+    encode,
+)

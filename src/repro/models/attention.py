@@ -1,0 +1,479 @@
+"""Attention flavours: GQA (+RoPE, QKV-bias, sliding-window), MLA, cross-attn.
+
+Two compute paths:
+  * plain einsum attention for short sequences (smoke tests, examples);
+  * flash-style chunked attention in pure jnp (two nested ``lax.scan``) for
+    long sequences — O(S * chunk) live memory, small HLO, used by the dry-run.
+    The Pallas kernel in ``repro.kernels.flash_attention`` implements the same
+    contract for the TPU production path.
+
+Decode attends one new token against a KV cache; sliding-window caches are
+ring buffers of ``window`` slots.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.models.modules import apply_rope, dense_init, init_norm, rms_norm
+
+_PLAIN_ATTN_MAX_SEQ = 2048
+_Q_CHUNK = 1024
+_KV_CHUNK = 1024
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def init_gqa(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (cfg.num_heads, hd), dtype),
+        "wk": dense_init(ks[1], d, (cfg.num_kv_heads, hd), dtype),
+        "wv": dense_init(ks[2], d, (cfg.num_kv_heads, hd), dtype),
+        "wo": dense_init(ks[3], cfg.num_heads * hd, (d,), dtype).reshape(
+            cfg.num_heads, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads, hd), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads, hd), dtype)
+    if cross:
+        # query-norm on the hidden stream, gating as in Llama-3.2-Vision
+        p["gate_attn"] = jnp.zeros((), dtype)
+    return p
+
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim          # qk nope dim
+    vhd = cfg.resolved_v_head_dim
+    rhd = cfg.qk_rope_head_dim
+    ks = jax.random.split(key, 7)
+    p = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], d, (cfg.q_lora_rank,), dtype)
+        p["norm_q"] = init_norm(cfg.q_lora_rank, dtype)
+        q_in = cfg.q_lora_rank
+    else:
+        q_in = d
+    p["w_uq"] = dense_init(ks[1], q_in, (cfg.num_heads, hd + rhd), dtype)
+    p["w_dkv"] = dense_init(ks[2], d, (cfg.kv_lora_rank + rhd,), dtype)
+    p["norm_kv"] = init_norm(cfg.kv_lora_rank, dtype)
+    p["w_uk"] = dense_init(ks[3], cfg.kv_lora_rank, (cfg.num_heads, hd), dtype)
+    p["w_uv"] = dense_init(ks[4], cfg.kv_lora_rank, (cfg.num_heads, vhd), dtype)
+    p["wo"] = dense_init(ks[5], cfg.num_heads * vhd, (d,), dtype).reshape(
+        cfg.num_heads, vhd, d)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core attention math
+# ---------------------------------------------------------------------------
+
+
+def _group_q(q: jax.Array, num_kv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, KV, G, hd)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, hd)
+
+
+def _plain_attention(q, k, v, *, q_pos, k_pos, causal, window, logit_dtype):
+    """q: (B,Sq,KV,G,hd); k,v: (B,Sk,KV,hd). Materializes (Sq,Sk) scores."""
+    hd = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+    scores = jnp.einsum("bqkgh,bskh->bqkgs", q.astype(logit_dtype),
+                        k.astype(logit_dtype)) * scale
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", probs.astype(v.dtype), v)
+    return out
+
+
+def _flash_attention_jnp(q, k, v, *, q_pos, k_pos, causal, window,
+                         q_chunk=_Q_CHUNK, kv_chunk=_KV_CHUNK,
+                         causal_skip: bool = False, unroll: bool = False):
+    """Flash-style online-softmax attention, pure jnp.
+
+    q: (B,Sq,KV,G,hd); k,v: (B,Sk,KV,hd); q_pos: (Sq,), k_pos: (Sk,).
+    ``causal_skip``: unroll the q-chunk loop in python and slice the KV range
+    each q chunk can actually see (exact-causal FLOPs; bigger HLO).  Default
+    is a uniform double-scan (2x the causal FLOPs, tiny HLO) — this is the
+    baseline/optimized pair used in EXPERIMENTS.md §Perf.
+
+    ``unroll``: python loops for BOTH chunk levels (dry-run cost mode only —
+    XLA cost analysis visits scan bodies once, so the scanned form
+    undercounts attention FLOPs/bytes by ~nq*nk).
+    """
+    if unroll:
+        q_chunk = kv_chunk = 2048  # fewer, MXU-aligned bodies for compile
+    b, sq, nkv, g, hd = q.shape
+    sk = k.shape[1]
+    vd = v.shape[-1]  # may differ from hd (MLA: qk 192, v 128)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, sk)
+    # pad ragged tails (e.g. 1601 vision tokens) and mask them out
+    sq_pad = (-sq) % q_chunk
+    sk_pad = (-sk) % kv_chunk
+    if sq_pad:
+        q = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, sq_pad))
+    if sk_pad:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad), (0, 0), (0, 0)))
+        # padded keys get position +inf-ish so the causal mask kills them;
+        # the explicit validity mask below handles the non-causal case
+        q_pos_max = jnp.iinfo(jnp.int32).max
+        k_pos = jnp.pad(k_pos, (0, sk_pad), constant_values=q_pos_max)
+    k_valid = jnp.arange(sk + sk_pad) < sk
+    sq_full, sk_full = sq + sq_pad, sk + sk_pad
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, jnp.float32))
+
+    def one_q_chunk(q_blk, qpos_blk, k_all, v_all, kpos_all, kvalid_all):
+        nkc = k_all.shape[1] // kv_chunk
+        k_c = k_all.reshape(b, nkc, kv_chunk, nkv, hd)
+        v_c = v_all.reshape(b, nkc, kv_chunk, nkv, vd)
+        kp_c = kpos_all.reshape(nkc, kv_chunk)
+        kv_c = kvalid_all.reshape(nkc, kv_chunk)
+
+        def body(carry, xs):
+            m, l, acc = carry
+            k_blk, v_blk, kp_blk, kval_blk = xs
+            s = jnp.einsum("bqkgh,bskh->bqkgs", q_blk, k_blk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = jnp.broadcast_to(kval_blk[None, :],
+                                    (q_blk.shape[1], kv_chunk))
+            if causal:
+                mask &= qpos_blk[:, None] >= kp_blk[None, :]
+            if window is not None:
+                mask &= qpos_blk[:, None] - kp_blk[None, :] < window
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        qc = q_blk.shape[1]
+        init = (jnp.full((b, qc, nkv, g), NEG_INF, jnp.float32),
+                jnp.zeros((b, qc, nkv, g), jnp.float32),
+                jnp.zeros((b, qc, nkv, g, vd), jnp.float32))
+        if unroll:
+            carry = init
+            for j in range(nkc):
+                carry, _ = body(carry, (k_c[:, j], v_c[:, j], kp_c[j],
+                                        kv_c[j]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, init,
+                (jnp.moveaxis(k_c, 1, 0), jnp.moveaxis(v_c, 1, 0), kp_c,
+                 kv_c))
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    nqc = sq_full // q_chunk
+    q_c = q.reshape(b, nqc, q_chunk, nkv, g, hd)
+    qp_c = q_pos.reshape(nqc, q_chunk)
+
+    if unroll and not (causal_skip and causal):
+        outs = [one_q_chunk(q_c[:, i], qp_c[i], k, v, k_pos, k_valid)
+                for i in range(nqc)]
+        out = jnp.stack(outs, axis=1).reshape(b, sq_full, nkv, g, vd)
+        return out[:, :sq]
+
+    if causal_skip and causal:
+        # python loop over q chunks with exact KV extent per chunk
+        outs = []
+        for i in range(nqc):
+            hi = (i + 1) * q_chunk
+            lo = 0
+            if window is not None:
+                lo = max(0, (i * q_chunk - int(window)) // kv_chunk * kv_chunk)
+            hi = min(((hi + kv_chunk - 1) // kv_chunk) * kv_chunk, sk_full)
+            outs.append(one_q_chunk(q_c[:, i], qp_c[i], k[:, lo:hi],
+                                    v[:, lo:hi], k_pos[lo:hi],
+                                    k_valid[lo:hi]))
+        out = jnp.stack(outs, axis=1).reshape(b, sq_full, nkv, g, vd)
+        return out[:, :sq]
+
+    out = jax.lax.map(
+        lambda xs: one_q_chunk(xs[0], xs[1], k, v, k_pos, k_valid),
+        (jnp.moveaxis(q_c, 1, 0), qp_c))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, sq_full, nkv, g, vd)
+    return out[:, :sq]
+
+
+def multihead_attention(q, k, v, *, q_pos, k_pos, causal, window=None,
+                        causal_skip=False, unroll=False,
+                        use_pallas=False):
+    """Dispatch between plain / flash-jnp / Pallas paths.
+    q: (B,Sq,H,hd) ungrouped."""
+    if use_pallas and q.shape[1] == k.shape[1] and \
+            q.shape[-1] == v.shape[-1] and q.shape[1] % 128 == 0:
+        # Pallas kernel path (TPU production; interpret=True on CPU).
+        # Layout: (B,S,H,D) -> (B,H,S,D); contiguous positions assumed.
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(
+            jnp.swapaxes(q, 1, 2), jnp.swapaxes(k, 1, 2),
+            jnp.swapaxes(v, 1, 2), causal=causal, window=window)
+        return jnp.swapaxes(out, 1, 2)
+    nkv = k.shape[2]
+    qg = _group_q(q, nkv)
+    if q.shape[1] * k.shape[1] <= _PLAIN_ATTN_MAX_SEQ ** 2:
+        out = _plain_attention(qg, k, v, q_pos=q_pos, k_pos=k_pos,
+                               causal=causal, window=window,
+                               logit_dtype=jnp.float32)
+    else:
+        out = _flash_attention_jnp(qg, k, v, q_pos=q_pos, k_pos=k_pos,
+                                   causal=causal, window=window,
+                                   causal_skip=causal_skip, unroll=unroll)
+    b, s = q.shape[:2]
+    return out.reshape(b, s, q.shape[2], v.shape[-1])  # out head dim = v's
+
+
+# ---------------------------------------------------------------------------
+# GQA self-attention (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x, kv_x=None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if cfg.qkv_bias and "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def gqa_forward(p: dict, cfg: ModelConfig, x, positions, *,
+                window=None, causal_skip=False, unroll=False,
+                use_pallas=False):
+    """x: (B,S,d); positions: (S,) absolute positions."""
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    win = window if window is not None else cfg.sliding_window
+    out = multihead_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              causal=True, window=win,
+                              causal_skip=causal_skip, unroll=unroll,
+                              use_pallas=use_pallas)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def cross_attention_forward(p: dict, cfg: ModelConfig, x, context,
+                            unroll=False):
+    """Cross-attention: queries from x (B,S,d), keys/values from context
+    (B,T,d).  No RoPE, no causal mask (Llama-3.2-Vision / enc-dec style)."""
+    q, k, v = _project_qkv(p, cfg, x, kv_x=context)
+    s_pos = jnp.arange(x.shape[1])
+    t_pos = jnp.arange(context.shape[1])
+    out = multihead_attention(q, k, v, q_pos=s_pos, k_pos=t_pos, causal=False,
+                              unroll=unroll)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "gate_attn" in p:
+        out = out * jnp.tanh(p["gate_attn"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA decode with KV cache (ring buffer for sliding-window)
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                  window=None) -> dict:
+    win = window if window is not None else cfg.sliding_window
+    slots = min(max_len, win) if win else max_len
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, slots, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((batch, slots, cfg.num_kv_heads, hd), dtype),
+    }
+
+
+def _pos_vec(pos, batch: int):
+    """Normalize decode positions to a (B,) vector (per-sequence positions
+    enable continuous batching: each slot decodes at its own offset)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    return jnp.broadcast_to(pos, (batch,)) if pos.ndim == 0 else pos
+
+
+def _ring_slot_positions(pos, slots: int):
+    """Positions stored in each ring slot after the token at ``pos`` was
+    inserted; -1 where the slot has never been written. pos: (B,)."""
+    s = jnp.arange(slots)
+    p = pos[:, None] - ((pos[:, None] - s[None, :]) % slots)
+    return jnp.where(p >= 0, p, -1)  # (B, slots)
+
+
+def gqa_decode(p: dict, cfg: ModelConfig, x, cache: dict, pos, *,
+               window=None):
+    """x: (B,1,d); pos: scalar or (B,) int32 position(s) of the new token.
+    Returns (out (B,1,d), new_cache)."""
+    b = x.shape[0]
+    pos = _pos_vec(pos, b)
+    q, k, v = _project_qkv(p, cfg, x)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slots = cache["k"].shape[1]
+    slot = jnp.mod(pos, slots)  # (B,)
+    bi = jnp.arange(b)
+    new_k = cache["k"].at[bi, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[bi, slot].set(v[:, 0].astype(cache["v"].dtype))
+
+    slot_pos = _ring_slot_positions(pos, slots)  # (B, slots)
+    win = window if window is not None else cfg.sliding_window
+    valid = slot_pos >= 0
+    valid &= slot_pos <= pos[:, None]
+    if win:
+        valid &= pos[:, None] - slot_pos < win
+
+    nkv = new_k.shape[2]
+    qg = _group_q(q, nkv)  # (B,1,KV,G,hd)
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bqkgh,bskh->bqkgs", qg, new_k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", probs.astype(new_v.dtype), new_v)
+    out = out.reshape(x.shape[0], 1, cfg.num_heads, -1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, {"k": new_k, "v": new_v}
+
+
+def init_cross_cache(p: dict, cfg: ModelConfig, context, dtype) -> dict:
+    """Precompute cross-attention K/V once from the (encoder/vision) context."""
+    k = jnp.einsum("btd,dhk->bthk", context, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", context, p["wv"])
+    if cfg.qkv_bias and "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return {"k": k.astype(dtype), "v": v.astype(dtype)}
+
+
+def cross_attention_decode(p: dict, cfg: ModelConfig, x, cross_cache: dict):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias and "bq" in p:
+        q = q + p["bq"]
+    k, v = cross_cache["k"], cross_cache["v"]
+    qg = _group_q(q, k.shape[2])
+    scale = 1.0 / jnp.sqrt(jnp.array(q.shape[-1], jnp.float32))
+    scores = jnp.einsum("bqkgh,bskh->bqkgs", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bqkgs,bskh->bqkgh", probs.astype(v.dtype), v)
+    out = out.reshape(x.shape[0], x.shape[1], cfg.num_heads, -1)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    if "gate_attn" in p:
+        out = out * jnp.tanh(p["gate_attn"])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def _mla_q(p: dict, cfg: ModelConfig, x, positions):
+    hd = cfg.resolved_head_dim
+    if cfg.q_lora_rank:
+        cq = x @ p["w_dq"]
+        cq = rms_norm(cq, p["norm_q"]["scale"], cfg.norm_eps)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"])
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["w_uq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p: dict, cfg: ModelConfig, x, positions):
+    ckv = x @ p["w_dkv"]  # (B,S,lora+rope)
+    c, k_rope = ckv[..., :cfg.kv_lora_rank], ckv[..., cfg.kv_lora_rank:]
+    c = rms_norm(c, p["norm_kv"]["scale"], cfg.norm_eps)
+    # k_rope is shared across heads: treat as a single head for RoPE
+    k_rope = apply_rope(k_rope[:, :, None, :], positions,
+                        cfg.rope_theta)[:, :, 0, :]
+    return c, k_rope
+
+
+def mla_forward(p: dict, cfg: ModelConfig, x, positions, *,
+                window=None, causal_skip=False, unroll=False):
+    """Naive (decompressed) MLA for train/prefill: materialize per-head K/V."""
+    hd = cfg.resolved_head_dim
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"])
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_nope.shape[:3], cfg.qk_rope_head_dim))],
+        axis=-1)
+    out = multihead_attention(q, k, v, q_pos=positions, k_pos=positions,
+                              causal=True, window=window,
+                              causal_skip=causal_skip, unroll=unroll)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    return {
+        "c": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p: dict, cfg: ModelConfig, x, cache: dict, pos):
+    """Absorbed MLA decode: attend directly in the latent space.
+
+    Cache holds the 512-dim latent + 64-dim shared rope key per token —
+    DeepSeek-V2's actual deployment trick (93% KV-cache reduction).
+    pos: scalar or (B,) per-sequence positions."""
+    hd = cfg.resolved_head_dim
+    b = x.shape[0]
+    pos = _pos_vec(pos, b)
+    q_nope, q_rope = _mla_q(p, cfg, x, pos[:, None])  # (B,1,H,*)
+    c_new, k_rope_new = _mla_latent(p, cfg, x, pos[:, None])
+
+    bi = jnp.arange(b)
+    cache_c = cache["c"].at[bi, pos].set(
+        c_new[:, 0].astype(cache["c"].dtype))
+    cache_r = cache["k_rope"].at[bi, pos].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    # absorb W_uk into the query: q_lat (B,1,H,lora)
+    q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"])
+    scale = 1.0 / jnp.sqrt(jnp.array(hd + cfg.qk_rope_head_dim, jnp.float32))
+    scores = (jnp.einsum("bshr,blr->bshl", q_lat, cache_c,
+                         preferred_element_type=jnp.float32)
+              + jnp.einsum("bshk,blk->bshl", q_rope, cache_r,
+                           preferred_element_type=jnp.float32)) * scale
+    valid = jnp.arange(cache_c.shape[1])[None, :] <= pos[:, None]
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx_lat = jnp.einsum("bshl,blr->bshr", probs.astype(cache_c.dtype),
+                         cache_c)
+    v = jnp.einsum("bshr,rhk->bshk", ctx_lat, p["w_uv"])
+    out = jnp.einsum("bshk,hkd->bsd", v, p["wo"])
+    return out, {"c": cache_c, "k_rope": cache_r}

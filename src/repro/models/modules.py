@@ -1,0 +1,100 @@
+"""Shared building blocks: norms, linear init, embeddings, dense FFN, RoPE."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_shape, dtype) -> jax.Array:
+    """Truncated-normal fan-in init, matching common LLM practice."""
+    scale = 1.0 / math.sqrt(in_dim)
+    flat_out = 1
+    for s in out_shape:
+        flat_out *= s
+    w = jax.random.truncated_normal(
+        key, -3.0, 3.0, (in_dim, flat_out), jnp.float32) * scale
+    return w.reshape((in_dim, *out_shape)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    w = jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+    return w.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * scale.astype(jnp.float32)).astype(dtype)
+
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (SwiGLU / GeGLU / GeLU)
+# ---------------------------------------------------------------------------
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int, dtype) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    if cfg.ffn_act in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(ks[0], d, (d_ff,), dtype),
+            "w_up": dense_init(ks[1], d, (d_ff,), dtype),
+            "w_down": dense_init(ks[2], d_ff, (d,), dtype),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, (d_ff,), dtype),
+        "w_down": dense_init(ks[1], d_ff, (d,), dtype),
+    }
+
+
+def ffn_apply(params: dict, x: jax.Array, act: str) -> jax.Array:
+    if act in ("swiglu", "geglu"):
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return (g * u) @ params["w_down"]
+    h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_down"]

@@ -1,0 +1,399 @@
+"""Mixture-of-Experts FFN with three execution paths.
+
+The survey (Sec. II-B, III-A) singles out MoE parallelism as the emerging
+strategy whose All-to-All dispatch traffic dominates: Lina prioritizes
+All-to-All over All-Reduce, Janus flips it into a data-centric "move the
+experts" scheme.  This module implements the token-centric (expert-parallel)
+scheme as a first-class ``shard_map`` program whose collectives are visible
+to the CCL/scheduler layers:
+
+  * ``moe_dense``     — O(T*E) loop oracle, used by smoke tests + kernels' ref
+  * ``moe_ep_train``  — sequence-sharded capacity dispatch, All-to-All over
+                        the expert-parallel axis, batched expert matmul,
+                        All-to-All back, weighted combine (train / prefill)
+  * ``moe_ep_decode`` — token-replicated local-expert compute with an
+                        All-Reduce combine (tiny T; avoids the A2A latency)
+
+Routing (softmax -> top-k -> renormalize) and the Switch-style load-balance
+auxiliary loss are computed in the surrounding pjit region so XLA shards
+them; the shard_map bodies receive ids/weights as data.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.types import ModelConfig
+from repro.models.modules import dense_init, ffn_apply, init_ffn
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    ff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, (e,), jnp.float32),
+        "w_gate": jax.vmap(lambda k: dense_init(k, d, (ff,), dtype))(
+            jax.random.split(ks[1], e)),
+        "w_up": jax.vmap(lambda k: dense_init(k, d, (ff,), dtype))(
+            jax.random.split(ks[2], e)),
+        "w_down": jax.vmap(lambda k: dense_init(k, ff, (d,), dtype))(
+            jax.random.split(ks[3], e)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_ffn(ks[4], cfg, ff * cfg.num_shared_experts, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Routing (runs in pjit)
+# ---------------------------------------------------------------------------
+
+
+def route(p: dict, cfg: ModelConfig, x: jax.Array):
+    """x: (..., d). Returns (ids (...,k), weights (...,k), aux_loss scalar)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, cfg.top_k)
+    weights = weights / jnp.maximum(
+        weights.sum(axis=-1, keepdims=True), 1e-9)
+    # Switch-transformer load-balance loss: E * sum_e f_e * P_e
+    e = cfg.num_experts
+    f = jnp.mean(jax.nn.one_hot(ids, e, dtype=jnp.float32), axis=tuple(
+        range(ids.ndim - 1)))  # (k, E) fraction per rank — sum over k below
+    f = f.sum(axis=0) if f.ndim == 2 else f
+    pbar = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = e * jnp.sum(f * pbar) / cfg.top_k
+    return ids, weights.astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Dense oracle path
+# ---------------------------------------------------------------------------
+
+
+def _expert_ffn(p: dict, cfg: ModelConfig, x_e: jax.Array) -> jax.Array:
+    """Batched-over-experts FFN. x_e: (E, T, d) -> (E, T, d)."""
+    g = jnp.einsum("etd,edf->etf", x_e, p["w_gate"])
+    u = jnp.einsum("etd,edf->etf", x_e, p["w_up"])
+    act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+    return jnp.einsum("etf,efd->etd", act(g) * u, p["w_down"])
+
+
+def moe_dense(p: dict, cfg: ModelConfig, x: jax.Array
+              ) -> Tuple[jax.Array, jax.Array]:
+    """Computes every expert for every token, masks by routing weight.
+    Exact (no capacity drops); used as the correctness oracle."""
+    ids, weights, aux = route(p, cfg, x)
+    shp = x.shape
+    xt = x.reshape(-1, shp[-1])
+    e = cfg.num_experts
+    y_all = _expert_ffn(p, cfg, jnp.broadcast_to(xt, (e, *xt.shape)))
+    w_full = jnp.zeros((xt.shape[0], e), x.dtype)
+    w_full = w_full.at[jnp.arange(xt.shape[0])[:, None],
+                       ids.reshape(-1, cfg.top_k)].set(
+        weights.reshape(-1, cfg.top_k))
+    y = jnp.einsum("te,etd->td", w_full, y_all)
+    y = y + _shared(p, cfg, xt)
+    return y.reshape(shp), aux
+
+
+def _shared(p: dict, cfg: ModelConfig, xt: jax.Array) -> jax.Array:
+    if "shared" in p:
+        return ffn_apply(p["shared"], xt, cfg.ffn_act)
+    return jnp.zeros_like(xt)
+
+
+# ---------------------------------------------------------------------------
+# Capacity-based dispatch helpers
+# ---------------------------------------------------------------------------
+
+
+def _slots(ids_flat: jax.Array, num_experts: int) -> jax.Array:
+    """Position of each (token, choice) within its expert's capacity queue.
+    ids_flat: (M,) expert ids. Returns (M,) slot indices (0-based)."""
+    one_hot = jax.nn.one_hot(ids_flat, num_experts, dtype=jnp.int32)
+    # exclusive cumsum: how many earlier dispatches target the same expert
+    cum = jnp.cumsum(one_hot, axis=0) - one_hot
+    return jnp.take_along_axis(cum, ids_flat[:, None], axis=1)[:, 0]
+
+
+def capacity_for(tokens: int, top_k: int, num_experts: int,
+                 factor: float) -> int:
+    c = math.ceil(tokens * top_k / num_experts * factor)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel train/prefill path (shard_map body)
+# ---------------------------------------------------------------------------
+
+
+def _ep_train_body(xt, ids, weights, w_gate, w_up, w_down, *,
+                   cfg: ModelConfig, axis: str, capacity: int):
+    """Per-shard body. xt: (T_local, d); ids/weights: (T_local, k);
+    w_*: local expert slices (E_local, ...)."""
+    tp = jax.lax.psum(1, axis)
+    e_local = w_gate.shape[0]
+    t, d = xt.shape
+    k = cfg.top_k
+    m = t * k
+
+    ids_f = ids.reshape(m)
+    w_f = weights.reshape(m)
+    dest = ids_f // e_local          # destination shard on the EP axis
+    le = ids_f % e_local             # local expert id on that shard
+    # slot within (dest, le) capacity queue; same expert id => same queue
+    slot = _slots(ids_f, cfg.num_experts)
+    ok = slot < capacity
+    slot_c = jnp.where(ok, slot, capacity)  # OOB rows dropped by scatter
+
+    x_rep = jnp.repeat(xt, k, axis=0)  # (M, d) token per dispatch
+    buf = jnp.zeros((tp, e_local, capacity + 1, d), xt.dtype)
+    buf = buf.at[dest, le, slot_c].set(x_rep, mode="drop")
+    buf = buf[:, :, :capacity]
+
+    # ---- All-to-All #1: tokens -> expert shards ----
+    recv = jax.lax.all_to_all(buf, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # recv: (tp, E_local, C, d), dim0 = source shard
+    h = jnp.swapaxes(recv, 0, 1).reshape(e_local, tp * capacity, d)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+    y = jnp.einsum("ecf,efd->ecd", act(g) * u, w_down)
+    y = jnp.swapaxes(y.reshape(e_local, tp, capacity, d), 0, 1)
+
+    # ---- All-to-All #2: results -> source shards ----
+    back = jax.lax.all_to_all(y, axis, split_axis=0, concat_axis=0,
+                              tiled=False)
+    # back: (tp, E_local, C, d), dim0 = dest shard again (round trip)
+    pad = jnp.zeros((tp, e_local, 1, d), back.dtype)
+    back = jnp.concatenate([back, pad], axis=2)
+    y_tok = back[dest, le, slot_c] * (w_f * ok)[:, None]
+    return y_tok.reshape(t, k, d).sum(axis=1)
+
+
+def moe_ep_train(p: dict, cfg: ModelConfig, x: jax.Array, mesh,
+                 ep_axis: str, data_axes, capacity_factor: float = 1.25
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) global. Sequence-sharded over ``ep_axis``; experts live
+    on ``ep_axis`` shards; two All-to-Alls per MoE layer (dispatch+combine)."""
+    ids, weights, aux = route(p, cfg, x)
+    b, s, d = x.shape
+    tp = 1
+    for a in (ep_axis,):
+        tp *= mesh.shape[a]
+    t_local = (b // _axis_prod(mesh, data_axes)) * (s // tp)
+    capacity = capacity_for(t_local, cfg.top_k, cfg.num_experts,
+                            capacity_factor)
+
+    body = partial(_ep_train_body, cfg=cfg, axis=ep_axis, capacity=capacity)
+
+    def shard_body(x_l, ids_l, w_l, wg, wu, wd):
+        t = x_l.shape[0] * x_l.shape[1]
+        y = body(x_l.reshape(t, d), ids_l.reshape(t, cfg.top_k),
+                 w_l.reshape(t, cfg.top_k), wg, wu, wd)
+        return y.reshape(x_l.shape)
+
+    bspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    xs = P(bspec, ep_axis, None)
+    y = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(xs, xs, xs,
+                  P(ep_axis, None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None)),
+        out_specs=xs,
+    )(x, ids, weights, p["w_gate"], p["w_up"], p["w_down"])
+    y = y + _shared(p, cfg, x.reshape(-1, d)).reshape(x.shape)
+    return y, aux
+
+
+def _axis_prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# Expert-parallel decode path (shard_map body)
+# ---------------------------------------------------------------------------
+
+
+def _ep_decode_body(xt, ids, weights, w_gate, w_up, w_down, *,
+                    cfg: ModelConfig, axis: str, capacity: int):
+    """Tokens replicated over the EP axis; each shard computes only its local
+    experts for the tokens routed to them, then All-Reduce combines."""
+    e_local = w_gate.shape[0]
+    rank = jax.lax.axis_index(axis)
+    t, d = xt.shape
+    k = cfg.top_k
+    m = t * k
+    ids_f = ids.reshape(m)
+    w_f = weights.reshape(m)
+    le = ids_f - rank * e_local
+    mine = (le >= 0) & (le < e_local)
+    slot = _slots(ids_f, cfg.num_experts)
+    ok = mine & (slot < capacity)
+    le_c = jnp.where(ok, le, 0)
+    slot_c = jnp.where(ok, slot, capacity)
+
+    x_rep = jnp.repeat(xt, k, axis=0)
+    buf = jnp.zeros((e_local, capacity + 1, d), xt.dtype)
+    buf = buf.at[le_c, slot_c].set(x_rep, mode="drop")
+    h = buf[:, :capacity]
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+    y = jnp.einsum("ecf,efd->ecd", act(g) * u, w_down)
+    y = jnp.concatenate([y, jnp.zeros((e_local, 1, d), y.dtype)], axis=1)
+    y_tok = y[le_c, slot_c] * (w_f * ok)[:, None]
+    out = y_tok.reshape(t, k, d).sum(axis=1)
+    return jax.lax.psum(out, axis)
+
+
+def moe_ep_decode(p: dict, cfg: ModelConfig, x: jax.Array, mesh,
+                  ep_axis: str, data_axes, capacity_factor: float = 4.0
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, 1, d). Combine is an All-Reduce over the EP axis — the decode
+    MoE traffic pattern differs from train (A2A), which the CommDemand layer
+    reports per shape."""
+    ids, weights, aux = route(p, cfg, x)
+    b, s, d = x.shape
+    dp = _axis_prod(mesh, data_axes)
+    batch_sharded = b % dp == 0
+    t_local = (b // dp if batch_sharded else b) * s
+    capacity = capacity_for(t_local, cfg.top_k, cfg.num_experts,
+                            capacity_factor)
+    body = partial(_ep_decode_body, cfg=cfg, axis=ep_axis, capacity=capacity)
+
+    def shard_body(x_l, ids_l, w_l, wg, wu, wd):
+        t = x_l.shape[0] * x_l.shape[1]
+        y = body(x_l.reshape(t, d), ids_l.reshape(t, cfg.top_k),
+                 w_l.reshape(t, cfg.top_k), wg, wu, wd)
+        return y.reshape(x_l.shape)
+
+    dspec = data_axes if len(data_axes) > 1 else data_axes[0]
+    # long-context decode has global_batch=1: replicate tokens over data
+    xs = P(dspec, None, None) if batch_sharded else P(None, None, None)
+    y = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(xs, xs, xs,
+                  P(ep_axis, None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None)),
+        out_specs=xs,
+    )(x, ids, weights, p["w_gate"], p["w_up"], p["w_down"])
+    y = y + _shared(p, cfg, x.reshape(-1, d)).reshape(x.shape)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Weight-stationary decode path (beyond-paper §Perf optimization)
+# ---------------------------------------------------------------------------
+#
+# With FSDP'd experts, the standard decode path all-gathers every expert's
+# weights over the data axes each step — gigabytes moved to compute a
+# one-token output.  Weight-stationary EP inverts it: weights stay sharded
+# over BOTH axes (experts over model, ffn dim over data); the tiny token
+# activations are replicated, each shard computes an ffn-slice partial for
+# its local experts, and two cheap activation psums (data: ffn partials,
+# model: expert combine) replace the weight gathers.
+
+
+def _ep_decode_ws_body(xt, ids, weights, w_gate, w_up, w_down, *,
+                       cfg: ModelConfig, model_axis: str, data_axes,
+                       capacity: int):
+    e_local = w_gate.shape[0]
+    rank = jax.lax.axis_index(model_axis)
+    t, d = xt.shape
+    k = cfg.top_k
+    m = t * k
+    ids_f = ids.reshape(m)
+    w_f = weights.reshape(m)
+    le = ids_f - rank * e_local
+    mine = (le >= 0) & (le < e_local)
+    slot = _slots(ids_f, cfg.num_experts)
+    ok = mine & (slot < capacity)
+    le_c = jnp.where(ok, le, 0)
+    slot_c = jnp.where(ok, slot, capacity)
+
+    x_rep = jnp.repeat(xt, k, axis=0)
+    buf = jnp.zeros((e_local, capacity + 1, d), xt.dtype)
+    buf = buf.at[le_c, slot_c].set(x_rep, mode="drop")
+    h = buf[:, :capacity]
+    # ffn-dim-sharded expert compute: partial over the data axes
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    act = jax.nn.silu if cfg.ffn_act == "swiglu" else jax.nn.gelu
+    y = jnp.einsum("ecf,efd->ecd", act(g) * u, w_down)
+    y = jnp.concatenate([y, jnp.zeros((e_local, 1, d), y.dtype)], axis=1)
+    y_tok = y[le_c, slot_c] * (w_f * ok)[:, None]
+    out = y_tok.reshape(t, k, d).sum(axis=1)
+    out = jax.lax.psum(out, model_axis)      # combine experts
+    for a in data_axes:
+        out = jax.lax.psum(out, a)           # combine ffn partials
+    return out
+
+
+def moe_ep_decode_ws(p: dict, cfg: ModelConfig, x: jax.Array, mesh,
+                     ep_axis: str, data_axes,
+                     capacity_factor: float = 4.0
+                     ) -> Tuple[jax.Array, jax.Array]:
+    ids, weights, aux = route(p, cfg, x)
+    b, s, d = x.shape
+    t_local = b * s  # tokens replicated over every axis in the body
+    capacity = capacity_for(t_local, cfg.top_k, cfg.num_experts,
+                            capacity_factor)
+    body = partial(_ep_decode_ws_body, cfg=cfg, model_axis=ep_axis,
+                   data_axes=tuple(data_axes), capacity=capacity)
+
+    def shard_body(x_l, ids_l, w_l, wg, wu, wd):
+        t = x_l.shape[0] * x_l.shape[1]
+        y = body(x_l.reshape(t, d), ids_l.reshape(t, cfg.top_k),
+                 w_l.reshape(t, cfg.top_k), wg, wu, wd)
+        return y.reshape(x_l.shape)
+
+    bspec = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    rep = P(None, None, None)
+    y = jax.shard_map(
+        shard_body, mesh=mesh,
+        in_specs=(rep, rep, rep,
+                  P(ep_axis, None, bspec), P(ep_axis, None, bspec),
+                  P(ep_axis, bspec, None)),
+        out_specs=rep,
+    )(x, ids, weights, p["w_gate"], p["w_up"], p["w_down"])
+    y = y + _shared(p, cfg, x.reshape(-1, d)).reshape(x.shape)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Unified entry point
+# ---------------------------------------------------------------------------
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array, *, ctx=None,
+              decode: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """ctx: ParallelCtx (repro.parallel.planner) or None for single-device."""
+    if ctx is None or ctx.mesh is None or not ctx.use_ep:
+        return moe_dense(p, cfg, x)
+    if decode:
+        if getattr(ctx, "ep_weight_stationary", False):
+            return moe_ep_decode_ws(
+                p, cfg, x, ctx.mesh, ctx.ep_axis, ctx.data_axes,
+                capacity_factor=ctx.decode_capacity_factor)
+        return moe_ep_decode(p, cfg, x, ctx.mesh, ctx.ep_axis, ctx.data_axes,
+                             capacity_factor=ctx.decode_capacity_factor)
+    return moe_ep_train(p, cfg, x, ctx.mesh, ctx.ep_axis, ctx.data_axes,
+                        capacity_factor=ctx.capacity_factor)

@@ -1,0 +1,3 @@
+"""Network layer (paper Sec. II-D / III-C): topologies + flow simulation."""
+from repro.net.topology import Topology  # noqa: F401
+from repro.net.simulate import simulate_flowset, simulate_schedule  # noqa: F401

@@ -1,0 +1,209 @@
+"""Network topologies for distributed training (paper Sec. II-D).
+
+Builders for the topology families the survey discusses: fat-tree (+ over-
+subscription), 2D/3D torus (TPU pods), ring, full-mesh, and the DGX-style
+intra-host NVLink ring+mesh with slower inter-host links — the heterogeneous
+"Intra-Inter" setting of Sec. IV-B.  Backed by networkx for path queries.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Tuple
+
+import networkx as nx
+
+
+@dataclass
+class Topology:
+    """Directed multigraph of GPUs/TPUs (+switch nodes) with per-link
+    bandwidth (bytes/s) and latency (s)."""
+
+    graph: nx.DiGraph
+    name: str = "custom"
+    accelerators: Tuple[int, ...] = ()
+
+    # ------------------------------------------------------------------
+    def link_bw(self, u, v) -> float:
+        return self.graph[u][v]["bw"]
+
+    def links(self) -> Iterable[Tuple[int, int, dict]]:
+        return self.graph.edges(data=True)
+
+    def path(self, src, dst) -> List:
+        """Latency-weighted shortest path (list of nodes)."""
+        return nx.shortest_path(self.graph, src, dst, weight="lat")
+
+    def path_links(self, src, dst) -> List[Tuple]:
+        p = self.path(src, dst)
+        return list(zip(p[:-1], p[1:]))
+
+    def bisection_bw(self) -> float:
+        """Max-flow bandwidth across a node-count bisection of the
+        accelerators (switch nodes route flow, they don't count as
+        endpoints)."""
+        n = len(self.accelerators)
+        left = self.accelerators[: n // 2]
+        right = self.accelerators[n // 2:]
+        g = nx.DiGraph()
+        for u, v, d in self.graph.edges(data=True):
+            g.add_edge(u, v, capacity=d["bw"])
+        inf = float("inf")
+        for u in left:
+            g.add_edge("__s", u, capacity=inf)
+        for v in right:
+            g.add_edge(v, "__t", capacity=inf)
+        return nx.maximum_flow_value(g, "__s", "__t")
+
+    @property
+    def num_accelerators(self) -> int:
+        return len(self.accelerators)
+
+
+def _new_graph():
+    return nx.DiGraph()
+
+
+def _bilink(g, u, v, bw, lat):
+    g.add_edge(u, v, bw=bw, lat=lat)
+    g.add_edge(v, u, bw=bw, lat=lat)
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def ring(n: int, bw: float = 50e9, lat: float = 1e-6) -> Topology:
+    g = _new_graph()
+    for i in range(n):
+        _bilink(g, i, (i + 1) % n, bw, lat)
+    return Topology(g, name=f"ring{n}", accelerators=tuple(range(n)))
+
+
+def full_mesh(n: int, bw: float = 50e9, lat: float = 1e-6) -> Topology:
+    g = _new_graph()
+    for i, j in itertools.combinations(range(n), 2):
+        _bilink(g, i, j, bw, lat)
+    return Topology(g, name=f"mesh{n}", accelerators=tuple(range(n)))
+
+
+def torus2d(nx_: int, ny: int, bw: float = 50e9, lat: float = 1e-6
+            ) -> Topology:
+    """2D torus with wraparound (TPU v5e pod = 16x16)."""
+    g = _new_graph()
+    def nid(x, y):
+        return x * ny + y
+    for x in range(nx_):
+        for y in range(ny):
+            _bilink(g, nid(x, y), nid((x + 1) % nx_, y), bw, lat)
+            _bilink(g, nid(x, y), nid(x, (y + 1) % ny), bw, lat)
+    return Topology(g, name=f"torus{nx_}x{ny}",
+                    accelerators=tuple(range(nx_ * ny)))
+
+
+def torus3d(a: int, b: int, c: int, bw: float = 50e9, lat: float = 1e-6
+            ) -> Topology:
+    """3D torus (TPU v4, [4] in the paper)."""
+    g = _new_graph()
+    def nid(x, y, z):
+        return (x * b + y) * c + z
+    for x in range(a):
+        for y in range(b):
+            for z in range(c):
+                _bilink(g, nid(x, y, z), nid((x + 1) % a, y, z), bw, lat)
+                _bilink(g, nid(x, y, z), nid(x, (y + 1) % b, z), bw, lat)
+                _bilink(g, nid(x, y, z), nid(x, y, (z + 1) % c), bw, lat)
+    return Topology(g, name=f"torus{a}x{b}x{c}",
+                    accelerators=tuple(range(a * b * c)))
+
+
+def fat_tree(num_hosts: int, gpus_per_host: int = 8,
+             nic_bw: float = 25e9, agg_bw: float = 100e9,
+             core_bw: float = 400e9, oversub: float = 1.0,
+             pcie_bw: float = 32e9, lat: float = 2e-6,
+             hosts_per_rack: int = 4, racks_per_pod: int = 4) -> Topology:
+    """Three-tier fat-tree (ToR / Agg / Core) with hosts of ``gpus_per_host``
+    GPUs behind a NIC — the Fig. 5(b) setting.  ``oversub`` > 1 thins the
+    uplinks."""
+    g = _new_graph()
+    accel = []
+    num_racks = (num_hosts + hosts_per_rack - 1) // hosts_per_rack
+    num_pods = (num_racks + racks_per_pod - 1) // racks_per_pod
+    core = "core"
+    for r in range(num_racks):
+        tor = f"tor{r}"
+        agg = f"agg{r // racks_per_pod}"
+        _bilink(g, tor, agg, agg_bw / oversub, lat)
+    for p in range(num_pods):
+        _bilink(g, f"agg{p}", core, core_bw / oversub, lat)
+    gid = 0
+    for h in range(num_hosts):
+        tor = f"tor{h // hosts_per_rack}"
+        nic = f"host{h}"
+        _bilink(g, nic, tor, nic_bw, lat)
+        for _ in range(gpus_per_host):
+            _bilink(g, gid, nic, pcie_bw, 5e-7)
+            accel.append(gid)
+            gid += 1
+    return Topology(g, name=f"fattree_h{num_hosts}",
+                    accelerators=tuple(accel))
+
+
+def dgx_cluster(num_hosts: int, gpus_per_host: int = 8,
+                nvlink_bw: float = 150e9, nic_bw: float = 25e9,
+                lat: float = 1e-6) -> Topology:
+    """DGX-1-style hosts: intra-host NVLink ring+mesh (fast), inter-host
+    NICs into a single switch (slow) — the "Intra-Inter" heterogeneity."""
+    g = _new_graph()
+    accel = []
+    sw = "switch"
+    for h in range(num_hosts):
+        base = h * gpus_per_host
+        gpus = list(range(base, base + gpus_per_host))
+        accel.extend(gpus)
+        # ring
+        for i in range(gpus_per_host):
+            _bilink(g, gpus[i], gpus[(i + 1) % gpus_per_host], nvlink_bw, lat)
+        # partial mesh (skip-2 links, as in DGX-1's hypercube-ish wiring)
+        for i in range(gpus_per_host):
+            _bilink(g, gpus[i], gpus[(i + 2) % gpus_per_host],
+                    nvlink_bw / 2, lat)
+        nic = f"host{h}"
+        _bilink(g, nic, sw, nic_bw, 2e-6)
+        for gpu in gpus:
+            _bilink(g, gpu, nic, nic_bw, 1e-6)
+    return Topology(g, name=f"dgx_h{num_hosts}", accelerators=tuple(accel))
+
+
+def tpu_pod(multi_pod: bool = False, ici_bw: float = 50e9,
+            dcn_bw: float = 25e9) -> Topology:
+    """The production mesh's physical fabric: 16x16 ICI torus per pod;
+    two pods joined via DCN through per-pod border hosts."""
+    if not multi_pod:
+        return torus2d(16, 16, bw=ici_bw)
+    g = _new_graph()
+    pods = []
+    for p in range(2):
+        t = torus2d(16, 16, bw=ici_bw)
+        off = p * 256
+        for u, v, d in t.graph.edges(data=True):
+            g.add_edge(u + off, v + off, **d)
+        pods.append(off)
+    # DCN: one border router per pod, 8 chips per pod homed on it
+    _bilink(g, "dcn0", "dcn1", dcn_bw * 8, 5e-6)
+    for p, off in enumerate(pods):
+        for i in range(0, 256, 32):
+            _bilink(g, off + i, f"dcn{p}", dcn_bw, 2e-6)
+    return Topology(g, name="tpu_2pods", accelerators=tuple(range(512)))
+
+
+TOPOLOGY_BUILDERS = {
+    "ring": ring,
+    "full_mesh": full_mesh,
+    "torus2d": torus2d,
+    "torus3d": torus3d,
+    "fat_tree": fat_tree,
+    "dgx": dgx_cluster,
+    "tpu_pod": tpu_pod,
+}

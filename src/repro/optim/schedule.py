@@ -1,0 +1,15 @@
+"""Linear-warmup + cosine-decay learning-rate schedule."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.types import TrainConfig
+
+
+def lr_schedule(step, tcfg: TrainConfig):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(tcfg.warmup_steps, 1))
+    prog = jnp.clip((step - tcfg.warmup_steps)
+                    / max(tcfg.total_steps - tcfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * (0.1 + 0.9 * cos)

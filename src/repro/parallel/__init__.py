@@ -1,0 +1,9 @@
+"""Parallelization-strategy layer (paper Sec. II-B / III-A)."""
+from repro.parallel.planner import (  # noqa: F401
+    ParallelCtx,
+    batch_specs,
+    cache_specs,
+    make_ctx,
+    param_specs,
+    validate_spec,
+)

@@ -1,0 +1,82 @@
+"""Collective (decomposed) matmul — the overlap lever from EXPERIMENTS §Perf.
+
+The Megatron TP pattern ``all_gather(x) @ W_col`` serializes a bulk
+All-Gather before the MXU can start.  The collective-matmul decomposition
+(Wang et al., ASPLOS'23; used by XLA's latency-hiding scheduler on TPU)
+splits it into p ring steps: at step s each shard multiplies the chunk it
+currently holds while ``ppermute``-ing the next chunk — communication
+rides under compute, turning the exposed All-Gather into (ideally) one
+chunk-latency of exposure.
+
+Two duals are provided (both inside ``shard_map``):
+
+  * ``ag_matmul``  — y = all_gather_s(x) @ W,  x sharded on its row dim,
+    W sharded on columns; output column-sharded.
+  * ``matmul_rs``  — y = reduce_scatter_s(x @ W), x column(=contraction)-
+    sharded, W row-sharded; the partial-sum reduce-scatter is decomposed
+    into the same ring.
+
+On CPU these validate numerically; on a TPU the per-step ppermutes give
+the scheduler independent DMA/MXU work to overlap (the HLO shows p
+small matmuls interleaved with p collective-permutes instead of one
+all-gather + one big dot).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ag_matmul(x_local: jax.Array, w_local: jax.Array, axis_name: str,
+              axis_size: int) -> jax.Array:
+    """x_local: (m/p, k) shard of x (sharded on rows over the axis);
+    w_local: (k, n/p) column shard of W.  Returns (m, n/p): this shard's
+    columns of all_gather(x) @ W, computed in p ring steps."""
+    p = axis_size
+    idx = lax.axis_index(axis_name)
+    m_local = x_local.shape[0]
+    out = jnp.zeros((p * m_local, w_local.shape[1]), x_local.dtype)
+    right = [(i, (i + 1) % p) for i in range(p)]
+    chunk = x_local
+    for s in range(p):
+        # the chunk currently held originated at rank (idx - s) mod p:
+        # its rows sit at block (idx - s) of the gathered x
+        src = (idx - s) % p
+        part = jax.lax.dot_general(
+            chunk, w_local, (((1,), (0,)), ((), ())),
+            preferred_element_type=out.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, part, src * m_local,
+                                              axis=0)
+        if s + 1 < p:
+            chunk = lax.ppermute(chunk, axis_name, right)
+    return out
+
+
+def matmul_rs(x_local: jax.Array, w_local: jax.Array, axis_name: str,
+              axis_size: int) -> jax.Array:
+    """x_local: (m, k/p) contraction shard; w_local: (k/p, n).  Returns
+    (m/p, n): this shard's row block of reduce_scatter(x @ W, rows),
+    with the partial-sum reduction decomposed into the ring."""
+    p = axis_size
+    idx = lax.axis_index(axis_name)
+    m = x_local.shape[0]
+    assert m % p == 0
+    mb = m // p
+    right = [(i, (i + 1) % p) for i in range(p)]
+
+    def partial(block_idx):
+        xb = lax.dynamic_slice_in_dim(x_local, block_idx * mb, mb, axis=0)
+        return jax.lax.dot_general(
+            xb, w_local, (((1,), (0,)), ((), ())),
+            preferred_element_type=x_local.dtype)
+
+    # ring accumulation (same index algebra as ccl.primitives.
+    # ring_reduce_scatter): an accumulator created on rank r carries row
+    # block r-1 and gathers every rank's partial for it as it travels
+    # right; rank i finishes holding the full sum for block i.
+    acc = partial((idx - 1) % p)
+    for s in range(p - 1):
+        acc = lax.ppermute(acc, axis_name, right)
+        acc = acc + partial((idx - s - 2) % p)
+    return acc

@@ -1,0 +1,174 @@
+"""Pipeline parallelism: runnable GPipe stage pipeline + PTD-P's
+interleaved-schedule analytics (paper Sec. III-A, [1]).
+
+The runnable path maps stages onto a ``pipe`` mesh axis inside shard_map;
+stage boundaries are ``ppermute`` point-to-point transfers — the exact
+traffic pattern the survey attributes to pipeline parallelism.  Autodiff
+through the ppermute chain gives the backward pipeline for free (reverse
+permutes), so the whole thing trains under ``jax.grad``.
+
+The analytic model reproduces PTD-P's central claim: with m microbatches
+and interleave factor v, the pipeline bubble shrinks from (p-1)/m to
+(p-1)/(m*v) at the cost of v-times more boundary communication.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# Analytics (PTD-P Sec. 2.2)
+# ---------------------------------------------------------------------------
+
+
+def bubble_fraction(p: int, m: int, v: int = 1) -> float:
+    """Fraction of the iteration spent idle in the pipeline bubble."""
+    return (p - 1) / (m * v)
+
+
+def iteration_time(p: int, m: int, v: int, t_chunk: float,
+                   t_comm: float = 0.0) -> float:
+    """1F1B schedule makespan: (m*v + p - 1) chunk slots of t_chunk, plus
+    per-boundary comm (v times more boundaries when interleaved)."""
+    slots = m * v + (p - 1)
+    return slots * (t_chunk / v) + m * v * t_comm
+
+
+# ---------------------------------------------------------------------------
+# Runnable GPipe pipeline over a mesh axis
+# ---------------------------------------------------------------------------
+
+
+def pipeline_apply(stage_fn: Callable, stage_params, x_mb: jax.Array,
+                   axis_name: str, num_stages: int) -> jax.Array:
+    """Run microbatches through the stage pipeline (inside shard_map).
+
+    stage_fn(params, x) -> x; stage_params: this device's stage params;
+    x_mb: (M, ...) microbatches (meaningful on stage 0; other stages
+    ignore).  Returns (M, ...) outputs (meaningful on the last stage).
+    """
+    p = num_stages
+    m = x_mb.shape[0]
+    idx = lax.axis_index(axis_name)
+    fwd_perm = [(i, i + 1) for i in range(p - 1)]
+
+    state = jnp.zeros_like(x_mb[0])
+    outs = jnp.zeros_like(x_mb)
+    recv = jnp.zeros_like(x_mb[0])
+
+    for t in range(m + p - 1):
+        # stage 0 injects microbatch t; others take the received activation
+        mb_idx = min(t, m - 1)
+        inp = jnp.where(idx == 0, x_mb[mb_idx], recv)
+        active = (t - idx >= 0) & (t - idx < m)
+        out = stage_fn(stage_params, inp)
+        out = jnp.where(active, out, jnp.zeros_like(out))
+        # last stage stores its finished microbatch (t - (p-1))
+        done_idx = t - (p - 1)
+        if done_idx >= 0:
+            store = jnp.where(idx == p - 1, out, jnp.zeros_like(out))
+            outs = lax.dynamic_update_slice_in_dim(
+                outs, store[None], done_idx, axis=0)
+        # hand activations to the next stage
+        if p > 1:
+            recv = lax.ppermute(out, axis_name, fwd_perm)
+    # make the outputs visible on every stage (only the last stage holds
+    # non-zeros, so a psum acts as the final broadcast)
+    return lax.psum(outs, axis_name)
+
+
+def interleaved_pipeline_apply(stage_fn: Callable, chunk_params,
+                               x_mb: jax.Array, axis_name: str,
+                               num_stages: int, v: int) -> jax.Array:
+    """PTD-P interleaved schedule, runnable (inside shard_map).
+
+    Each device holds ``v`` model CHUNKS (params stacked on a leading v
+    dim); virtual stage k runs on device k % p with chunk k // p, so an
+    activation ring-hops right every tick and finishes after v*p ticks.
+    The bubble shrinks to (p-1)/(m*v) at the cost of v times more boundary
+    traffic — exactly the paper's PTD-P row, now executable.
+
+    stage_fn(chunk_param, x) -> x; x_mb: (M, ...) microbatches (stage 0
+    injects); returns (M, ...) outputs (psum-broadcast at the end).
+    """
+    p = num_stages
+    m = x_mb.shape[0]
+    idx = lax.axis_index(axis_name)
+    right = [(i, (i + 1) % p) for i in range(p)]
+    total_vstages = v * p
+
+    outs = jnp.zeros_like(x_mb)
+    recv = jnp.zeros_like(x_mb[0])
+    recv_vs = jnp.full((), -1, jnp.int32)  # virtual stage of recv (-1 idle)
+    inj_count = jnp.zeros((), jnp.int32)   # microbatches injected (dev 0)
+    done_count = jnp.zeros((), jnp.int32)  # microbatches finished (FIFO)
+
+    # injections stall while a returning chunk occupies device 0, so the
+    # tick budget is m visits x v chunks on device 0 plus the drain
+    for t in range(m * v + 2 * total_vstages):
+        inject = (idx == 0) & (inj_count < m) & (recv_vs < 0)
+        x_next = lax.dynamic_index_in_dim(
+            x_mb, jnp.clip(inj_count, 0, m - 1), axis=0, keepdims=False)
+        x_in = jnp.where(inject, x_next, recv)
+        vs = jnp.where(inject, 0, recv_vs)
+        inj_count = inj_count + inject.astype(jnp.int32)
+
+        active = (vs >= 0) & (vs < total_vstages) & \
+            (lax.rem(vs, p) == idx)
+        chunk_idx = jnp.clip(vs // p, 0, v - 1)
+        branches = [lambda x_, _c=c: stage_fn(
+            jax.tree.map(lambda a, _c2=_c: a[_c2], chunk_params), x_)
+            for c in range(v)]
+        y = lax.switch(chunk_idx, branches, x_in)
+        y = jnp.where(active, y, jnp.zeros_like(y))
+        vs_out = jnp.where(active, vs + 1, jnp.full((), -1, jnp.int32))
+
+        # completed activations collect (in injection order) on the last
+        # virtual stage's device
+        done = vs_out == total_vstages
+        store = jnp.where(done, y, jnp.zeros_like(y))
+        # scatter-ADD: non-done ticks contribute zeros, so the slot written
+        # by the final completion is never clobbered afterwards
+        outs = outs.at[jnp.clip(done_count, 0, m - 1)].add(store)
+        done_count = done_count + done.astype(jnp.int32)
+
+        # ring-hop everything still in flight
+        send = jnp.where(done, jnp.zeros_like(y), y)
+        send_vs = jnp.where(done, jnp.full((), -1, jnp.int32), vs_out)
+        if p > 1:
+            recv = lax.ppermute(send, axis_name, right)
+            recv_vs = lax.ppermute(send_vs, axis_name, right)
+        else:
+            recv, recv_vs = send, send_vs
+    return lax.psum(outs, axis_name)
+
+
+def make_pipeline_fn(stage_fn: Callable, mesh, axis_name: str = "pipe"):
+    """Wrap pipeline_apply as a jitted global function.
+
+    stage_params leaves must have a leading dim == num_stages (stacked);
+    x_mb: (M, mb, ...) global microbatches.
+    """
+    p = mesh.shape[axis_name]
+
+    def global_fn(stage_params, x_mb):
+        def body(params_local, x_local):
+            sp = jax.tree.map(lambda a: a[0], params_local)
+            return pipeline_apply(stage_fn, sp, x_local, axis_name, p)
+
+        pspec = jax.tree.map(lambda _: P(axis_name), stage_params)
+        return jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(pspec, P()),
+            out_specs=P(),
+            check_vma=False,
+        )(stage_params, x_mb)
+
+    return jax.jit(global_fn)

@@ -1,0 +1,12 @@
+"""Scheduler middleware — the two layers the paper ADDS to get from the
+three-layer to the five-layer paradigm (Sec. IV-A).
+
+``tasks``  — task scheduler ("Vertical" co-design): orders the comm tasks a
+             parallelization strategy emits, overlapping them with compute
+             to minimize JCT (Lina-style priority, Echelon-style slack).
+``flows``  — flow scheduler ("Horizontal" co-design): places multiple jobs'
+             flows onto shared links (CASSINI-style staggering).
+``atp``    — "Host-Net" co-design: in-network aggregation modeling (ATP).
+"""
+from repro.sched.tasks import SimResult, simulate_iteration  # noqa: F401
+from repro.sched.flows import stagger_jobs, multi_job_jct  # noqa: F401

@@ -1,0 +1,42 @@
+"""Serving: prefill + batched single-token decode against the KV cache."""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import ModelConfig
+from repro.models.transformer import decode_step, forward
+
+
+def make_serve_step(cfg: ModelConfig, ctx=None,
+                    window: Optional[int] = None,
+                    temperature: float = 0.0) -> Callable:
+    """Returns step(params, cache, tokens (B,1), pos, key) ->
+    (next_tokens (B,1), logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, pos, key):
+        logits, new_cache = decode_step(cfg, params, cache, tokens, pos,
+                                        ctx=ctx, window=window)
+        last = logits[:, -1, :]
+        if temperature > 0.0:
+            nxt = jax.random.categorical(key, last / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, ctx=None,
+                 window: Optional[int] = None) -> Callable:
+    """Forward over the prompt; the examples' serving driver re-feeds the
+    prompt through decode_step to fill the cache (simple, cache-exact)."""
+
+    def prefill(params, tokens, context=None):
+        logits, _ = forward(cfg, params, tokens, context=context, ctx=ctx,
+                            window=window)
+        return logits
+
+    return prefill

@@ -1,0 +1,23 @@
+"""Cross-entropy over (possibly vocab-sharded) logits.
+
+Uses logsumexp directly on the padded-vocab logits — with the LM head
+sharded over the model axis the reduction stays sharded and XLA emits a
+small All-Reduce over per-shard partial sums instead of gathering the full
+(B, S, V) logits (the "vocab-sharded loss" optimization in §Perf)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  ignore_index: int = -1) -> jax.Array:
+    """logits: (B, S, V) (padded vocab already masked with a -inf bias);
+    labels: (B, S) int32.  Returns mean NLL over non-ignored tokens."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    true_logit = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - true_logit
+    mask = (labels != ignore_index).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,100 @@
+"""Per-architecture smoke tests: reduced config (2 layers, d_model<=256,
+<=4 experts), one forward + one train step on CPU; output shapes + no NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.core.types import TrainConfig
+from repro.data.stubs import audio_frames, vision_patches
+from repro.models import encode, forward, init_params
+from repro.optim.adamw import init_opt_state
+from repro.train.step import make_train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens,
+             "labels": jnp.roll(tokens, -1, axis=1)}
+    if cfg.is_encoder_decoder:
+        batch["context"] = jnp.asarray(audio_frames(cfg, B))
+    elif cfg.cross_attn_period:
+        batch["context"] = jnp.asarray(vision_patches(cfg, B))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    context = batch.get("context")
+    if cfg.is_encoder_decoder:
+        context = encode(cfg, params, context)
+    logits, aux = forward(cfg, params, batch["tokens"], context=context)
+    assert logits.shape == (B, S, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+    assert bool(jnp.isfinite(aux)), f"{arch}: non-finite aux loss"
+    if cfg.is_moe:
+        assert float(aux) > 0.0  # load-balance loss active
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_loss_and_finite(arch):
+    cfg = smoke_config(arch)
+    tcfg = TrainConfig(learning_rate=5e-3, warmup_steps=1, total_steps=20,
+                       remat=False, weight_decay=0.0)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    opt = init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    batch = _batch(cfg, key)
+    losses = []
+    for _ in range(5):
+        params, opt, metrics = step(params, opt, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all(), f"{arch}: NaN loss {losses}"
+    assert losses[-1] < losses[0], \
+        f"{arch}: loss should drop on repeated batch {losses}"
+
+
+def test_full_configs_match_assignment():
+    """Exact assigned hyperparameters (spot checks)."""
+    g = get_config("granite-3-8b")
+    assert (g.num_layers, g.d_model, g.num_heads, g.num_kv_heads,
+            g.d_ff, g.vocab_size) == (40, 4096, 32, 8, 12800, 49155)
+    d = get_config("deepseek-v2-236b")
+    assert (d.num_layers, d.d_model, d.num_experts, d.top_k,
+            d.kv_lora_rank, d.num_shared_experts) == (60, 5120, 160, 6,
+                                                      512, 2)
+    j = get_config("jamba-1.5-large-398b")
+    assert (j.num_layers, j.attn_period, j.num_experts, j.top_k,
+            j.moe_layer_period) == (72, 8, 16, 2, 2)
+    specs = j.layer_specs()
+    assert sum(1 for s in specs if s.mixer == "attn") == 9
+    assert sum(1 for s in specs if s.ffn == "moe") == 36
+    lv = get_config("llama-3.2-vision-90b")
+    assert sum(1 for s in lv.layer_specs() if s.mixer == "cross_attn") == 20
+    q = get_config("qwen2-0.5b")
+    assert q.qkv_bias and q.tie_embeddings
+    m = get_config("mamba2-130m")
+    assert m.attention == "none" and m.ssm_state == 128
+
+
+def test_param_counts_match_names():
+    """Total parameter counts should match the model names (~+-15%)."""
+    expected = {
+        "granite-3-8b": 8e9, "mamba2-130m": 0.13e9,
+        "h2o-danube-1.8b": 1.8e9, "deepseek-v2-236b": 236e9,
+        "dbrx-132b": 132e9, "llama-3.2-vision-90b": 90e9,
+        "jamba-1.5-large-398b": 398e9, "qwen2-0.5b": 0.5e9,
+        "starcoder2-3b": 3e9,
+    }
+    for arch, n in expected.items():
+        total = get_config(arch).param_counts()["total"]
+        assert 0.8 * n < total < 1.25 * n, (arch, total, n)

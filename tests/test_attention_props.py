@@ -1,0 +1,130 @@
+"""Attention-path properties: flash==plain, causal-skip==uniform scan,
+RoPE norm preservation & relative-position property, MLA absorption."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import smoke_config
+from repro.models.attention import (_flash_attention_jnp, _group_q,
+                                    _plain_attention, mla_forward,
+                                    multihead_attention)
+from repro.models.modules import apply_rope
+
+
+def _qkv(key, b, sq, sk, h, kv, d, vd=None):
+    vd = vd or d
+    q = jax.random.normal(key, (b, sq, h, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, sk, kv, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, sk, kv, vd))
+    return q, k, v
+
+
+@pytest.mark.parametrize("sq,sk,window", [
+    (256, 256, None), (128, 384, None), (256, 256, 100), (100, 300, 77),
+])
+def test_flash_equals_plain(sq, sk, window):
+    key = jax.random.PRNGKey(0)
+    q, k, v = _qkv(key, 2, sq, sk, 4, 2, 32)
+    qg = _group_q(q, 2)
+    qp = jnp.arange(sk - sq, sk)  # q positions aligned to the kv suffix
+    kp = jnp.arange(sk)
+    plain = _plain_attention(qg, k, v, q_pos=qp, k_pos=kp, causal=True,
+                             window=window, logit_dtype=jnp.float32)
+    flash = _flash_attention_jnp(qg, k, v, q_pos=qp, k_pos=kp, causal=True,
+                                 window=window, q_chunk=64, kv_chunk=64)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(plain),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_unrolled_flash_equals_scanned():
+    """The dry-run cost-mode unrolled flash (python chunk loops) must match
+    the scanned production form bit-for-bit-ish."""
+    key = jax.random.PRNGKey(7)
+    q, k, v = _qkv(key, 1, 4096, 4096, 2, 2, 32)
+    qg = _group_q(q, 2)
+    pos = jnp.arange(4096)
+    a = _flash_attention_jnp(qg, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             window=None)
+    b = _flash_attention_jnp(qg, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             window=None, unroll=True)
+    c = _flash_attention_jnp(qg, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             window=None, unroll=True, causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+def test_causal_skip_equals_uniform():
+    key = jax.random.PRNGKey(1)
+    q, k, v = _qkv(key, 1, 512, 512, 2, 2, 32)
+    qg = _group_q(q, 2)
+    pos = jnp.arange(512)
+    a = _flash_attention_jnp(qg, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             window=None, q_chunk=128, kv_chunk=128,
+                             causal_skip=False)
+    b = _flash_attention_jnp(qg, k, v, q_pos=pos, k_pos=pos, causal=True,
+                             window=None, q_chunk=128, kv_chunk=128,
+                             causal_skip=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+def test_mla_head_dims():
+    """MLA with distinct qk (192) and v (128) head dims runs through both
+    the plain and flash paths."""
+    cfg = smoke_config("deepseek-v2-236b")
+    from repro.models.attention import init_mla
+    key = jax.random.PRNGKey(0)
+    p = init_mla(key, cfg, jnp.float32)
+    for s in (16, 4096):  # plain path, then flash path
+        x = jax.random.normal(key, (1, s, cfg.d_model)) * 0.02
+        out = mla_forward(p, cfg, x, jnp.arange(s))
+        assert out.shape == (1, s, cfg.d_model)
+        assert bool(jnp.isfinite(out).all())
+        if s == 4096:
+            break  # one flash-path pass is enough (CPU time)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_rope_preserves_norm(pos):
+    key = jax.random.PRNGKey(pos)
+    x = jax.random.normal(key, (1, 1, 2, 64))
+    y = apply_rope(x, jnp.asarray([pos]), 10_000.0)
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(x)),
+                               np.linalg.norm(np.asarray(y)), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,m), rope(k,n)> depends only on m-n."""
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, 64))
+
+    def dot_at(m, n):
+        qm = apply_rope(q, jnp.asarray([m]), 10_000.0)
+        kn = apply_rope(k, jnp.asarray([n]), 10_000.0)
+        return float(jnp.sum(qm * kn))
+
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
+    assert dot_at(17, 0) == pytest.approx(dot_at(1017, 1000), rel=1e-4)
+
+
+def test_softmax_rows_sum_to_one_under_padding():
+    """Ragged KV (vision tokens) padding must not leak probability mass:
+    attention output for valid tokens is unchanged by padding amount."""
+    key = jax.random.PRNGKey(4)
+    q, k, v = _qkv(key, 1, 128, 1601, 4, 4, 32)
+    pos_q = jnp.arange(128)
+    pos_k = jnp.arange(1601)
+    out = multihead_attention(q, k, v, q_pos=pos_q, k_pos=pos_k,
+                              causal=False)
+    # same computation with KV padded manually to 2048 + masked
+    k2 = jnp.pad(k, ((0, 0), (0, 447), (0, 0), (0, 0)))
+    v2 = jnp.pad(v, ((0, 0), (0, 447), (0, 0), (0, 0)))
+    out2 = multihead_attention(q, k2[:, :1601], v2[:, :1601], q_pos=pos_q,
+                               k_pos=pos_k, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2), atol=1e-5)

@@ -1,0 +1,67 @@
+"""Decode-path equivalence: step-by-step decode against the cache must
+reproduce the full forward logits for every architecture family (GQA ring
+buffers, MLA latent cache, Mamba recurrence, hybrid, enc-dec, VLM)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, smoke_config
+from repro.data.stubs import audio_frames, vision_patches
+from repro.models import decode_step, encode, forward, init_cache, init_params
+
+B, S = 2, 16
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    tokens = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    context = None
+    if cfg.is_encoder_decoder:
+        context = encode(cfg, params, jnp.asarray(audio_frames(cfg, B)))
+    elif cfg.cross_attn_period:
+        context = jnp.asarray(vision_patches(cfg, B))
+    full, _ = forward(cfg, params, tokens, context=context)
+    cache = init_cache(cfg, params, B, S, context=context)
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t:t + 1], t)
+        err = float(jnp.abs(logits[:, 0] - full[:, t]).max())
+        assert err < 2e-4, f"{arch} step {t}: err={err}"
+
+
+def test_sliding_window_ring_buffer():
+    """With window W, the ring-buffer decode must equal a full forward that
+    uses the same window, even past the buffer wrap-around."""
+    cfg = smoke_config("h2o-danube-1.8b")
+    import dataclasses
+    cfg = dataclasses.replace(cfg, sliding_window=8)
+    key = jax.random.PRNGKey(3)
+    params = init_params(cfg, key)
+    s = 24  # > 2x window: buffer wraps
+    tokens = jax.random.randint(key, (B, s), 0, cfg.vocab_size)
+    full, _ = forward(cfg, params, tokens)
+    cache = init_cache(cfg, params, B, s)
+    assert cache["group0"]["pos0"]["k"].shape[2] == 8  # ring slots == window
+    step = jax.jit(lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
+    for t in range(s):
+        logits, cache = step(params, cache, tokens[:, t:t + 1], t)
+        err = float(jnp.abs(logits[:, 0] - full[:, t]).max())
+        assert err < 2e-4, f"wrap step {t}: err={err}"
+
+
+def test_long_context_window_policy():
+    from repro.core.types import LONG_500K, DECODE_32K
+    from repro.configs import get_config
+    from repro.launch.specs import decode_window, uses_swa_variant
+    # native long-context archs
+    for arch in ("mamba2-130m", "jamba-1.5-large-398b", "deepseek-v2-236b",
+                 "h2o-danube-1.8b"):
+        assert decode_window(get_config(arch), LONG_500K) is None, arch
+    # SWA-variant archs
+    for arch in ("granite-3-8b", "qwen2-0.5b", "starcoder2-3b", "dbrx-132b",
+                 "llama-3.2-vision-90b", "seamless-m4t-medium"):
+        assert uses_swa_variant(get_config(arch), LONG_500K), arch
+        assert not uses_swa_variant(get_config(arch), DECODE_32K), arch

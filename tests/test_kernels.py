@@ -1,0 +1,116 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret=True)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,sq,sk,d", [
+    (1, 2, 2, 128, 128, 64),
+    (2, 4, 2, 256, 256, 64),   # GQA group 2
+    (1, 8, 1, 256, 512, 128),  # MQA, rectangular
+])
+@pytest.mark.parametrize("causal,window", [
+    (True, None), (False, None), (True, 128),
+])
+def test_flash_attention_sweep(b, h, kv, sq, sk, d, causal, window, dtype):
+    key = jax.random.PRNGKey(b * 100 + h)
+    q = jax.random.normal(key, (b, h, sq, d), dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, kv, sk, d), dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, kv, sk, d), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window)
+    ref = attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("block", [(64, 64), (128, 128), (128, 64)])
+def test_flash_attention_block_shapes(block):
+    bq, bk = block
+    key = jax.random.PRNGKey(7)
+    q = jax.random.normal(key, (1, 2, 256, 64))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 2, 256, 64))
+    out = flash_attention(q, k, v, bq=bq, bk=bk)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,l,p,n,chunk", [
+    (1, 2, 256, 64, 32, 64),
+    (2, 4, 512, 64, 128, 128),  # mamba2-130m-like state
+    (1, 2, 256, 128, 64, 256),  # jamba-like head dim
+])
+def test_ssd_scan_sweep(b, h, l, p, n, chunk, dtype):
+    key = jax.random.PRNGKey(l + p)
+    x = (jax.random.normal(key, (b, h, l, p)) * 0.5).astype(dtype)
+    dt = jax.nn.softplus(
+        jax.random.normal(jax.random.fold_in(key, 1), (b, h, l))).astype(
+        jnp.float32)
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+    bb = (jax.random.normal(jax.random.fold_in(key, 3), (b, l, n)) * 0.3
+          ).astype(dtype)
+    cc = (jax.random.normal(jax.random.fold_in(key, 4), (b, l, n)) * 0.3
+          ).astype(dtype)
+    out = ssd_scan(x, dt, a, bb, cc, chunk=chunk)
+    ref = ssd_scan_ref(x, dt, a, bb, cc, chunk=chunk)
+    scale = max(float(jnp.abs(ref.astype(jnp.float32)).max()), 1.0)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32) / scale,
+        np.asarray(ref, np.float32) / scale,
+        atol=3e-2 if dtype == jnp.bfloat16 else 3e-5, rtol=3e-2)
+
+
+def test_ssd_scan_state_continuity():
+    """Scanning 2 chunks must differ from treating them independently —
+    proves the VMEM carry state crosses the chunk boundary."""
+    key = jax.random.PRNGKey(0)
+    b, h, l, p, n = 1, 1, 256, 32, 16
+    x = jax.random.normal(key, (b, h, l, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (b, h, l)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)))
+    bb = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n)) * 0.3
+    cc = jax.random.normal(jax.random.fold_in(key, 4), (b, l, n)) * 0.3
+    joint = ssd_scan(x, dt, a, bb, cc, chunk=128)
+    # independent halves
+    h1 = ssd_scan(x[:, :, :128], dt[:, :, :128], a, bb[:, :128], cc[:, :128],
+                  chunk=128)
+    h2 = ssd_scan(x[:, :, 128:], dt[:, :, 128:], a, bb[:, 128:], cc[:, 128:],
+                  chunk=128)
+    assert np.allclose(np.asarray(joint[:, :, :128]), np.asarray(h1),
+                       atol=1e-5)
+    assert not np.allclose(np.asarray(joint[:, :, 128:]), np.asarray(h2),
+                           atol=1e-3), "second chunk ignored carried state"
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f,blocks", [
+    (2, 128, 256, 128, dict()),
+    (4, 256, 512, 384, dict(bd=128)),
+    (16, 128, 256, 256, dict(bc=64, bf=128, bd=64)),  # dbrx-like E
+])
+def test_moe_gmm_sweep(e, c, d, f, blocks, dtype):
+    key = jax.random.PRNGKey(e * 10 + f)
+    x = jax.random.normal(key, (e, c, d), dtype)
+    w = (jax.random.normal(jax.random.fold_in(key, 1), (e, d, f)) * 0.05
+         ).astype(dtype)
+    out = moe_gmm(x, w, **blocks)
+    ref = moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

@@ -1,0 +1,66 @@
+"""Network layer: topology invariants + ATP in-network aggregation."""
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.demand import CommTask
+from repro.net.topology import (dgx_cluster, fat_tree, full_mesh, ring,
+                                torus2d, torus3d, tpu_pod)
+from repro.sched.atp import atp_traffic
+
+
+@pytest.mark.parametrize("builder,args", [
+    (ring, (8,)), (full_mesh, (8,)), (torus2d, (4, 4)),
+    (torus3d, (2, 2, 2)), (fat_tree, (8,)), (dgx_cluster, (2,)),
+])
+def test_topology_connectivity(builder, args):
+    topo = builder(*args)
+    accel = topo.accelerators
+    assert len(accel) >= 8
+    # all-pairs reachability between accelerators
+    p = topo.path(accel[0], accel[-1])
+    assert p[0] == accel[0] and p[-1] == accel[-1]
+    assert topo.bisection_bw() > 0
+
+
+def test_torus_degree():
+    topo = torus2d(16, 16)
+    for n in topo.accelerators:
+        assert topo.graph.out_degree(n) == 4  # 2D torus: 4 links per chip
+
+
+def test_tpu_pod_shapes():
+    single = tpu_pod(False)
+    assert single.num_accelerators == 256
+    multi = tpu_pod(True)
+    assert multi.num_accelerators == 512
+    # inter-pod path must cross the DCN
+    path = multi.path(0, 256)
+    assert any(isinstance(n, str) and n.startswith("dcn") for n in path)
+
+
+@given(st.integers(2, 5))
+@settings(max_examples=8, deadline=None)
+def test_dgx_intra_faster_than_inter(num_hosts):
+    """'Intra-Inter' heterogeneity: intra-host hops are NVLink, inter-host
+    must traverse the slow NIC (Sec. IV-B)."""
+    topo = dgx_cluster(num_hosts)
+    intra = topo.path_links(0, 1)
+    inter = topo.path_links(0, 8)
+    min_bw_intra = min(topo.graph[u][v]["bw"] for u, v in intra)
+    min_bw_inter = min(topo.graph[u][v]["bw"] for u, v in inter)
+    assert min_bw_intra > 2 * min_bw_inter
+
+
+def test_atp_reduces_traffic():
+    """In-network aggregation cuts PS-bound traffic; degraded mode (switch
+    capacity exhausted) falls back to host aggregation (ATP [15])."""
+    topo = fat_tree(8)
+    workers = tuple(topo.accelerators[:16])
+    task = CommTask("grad", "all_reduce", 64 * 2 ** 20, workers)
+    ps = topo.accelerators[-1]
+    res = atp_traffic(topo, task, ps)
+    assert res["traffic_reduction"] > 1.3
+    assert res["speedup"] >= 1.0
+    degraded = atp_traffic(topo, task, ps, switch_capacity=4)
+    assert degraded["traffic_reduction"] == pytest.approx(1.0)

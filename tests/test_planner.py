@@ -1,0 +1,102 @@
+"""Sharding planner: every param/cache spec must divide cleanly on both
+production meshes for all 10 architectures; FSDP and ZeRO-1 extensions
+must stay valid and never double-assign a mesh axis."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.core.types import (INPUT_SHAPES, MULTI_POD_MESH, SHAPES_BY_NAME,
+                              SINGLE_POD_MESH)
+from repro.launch.specs import cache_shapes
+from repro.models.transformer import init_params
+from repro.parallel.planner import (apply_fsdp, cache_specs, param_specs,
+                                    validate_spec, zero1_spec)
+
+MESHES = [SINGLE_POD_MESH, MULTI_POD_MESH]
+
+
+def _shapes(cfg):
+    return jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0), dtype=jnp.bfloat16))
+
+
+def _check_tree(specs, shapes, mcfg):
+    leaves_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    leaves_h = jax.tree.leaves(shapes)
+    assert len(leaves_s) == len(leaves_h)
+    for sp, sh in zip(leaves_s, leaves_h):
+        assert validate_spec(sp, sh.shape, mcfg), (sp, sh.shape)
+        # no duplicate axis use
+        used = [a for e in sp for a in
+                (e if isinstance(e, tuple) else (e,)) if a]
+        assert len(used) == len(set(used)), sp
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mcfg", MESHES, ids=["1pod", "2pod"])
+def test_param_specs_valid(arch, mcfg):
+    cfg = get_config(arch)
+    shapes = _shapes(cfg)
+    specs = param_specs(cfg, mcfg)
+    _check_tree(specs, shapes, mcfg)
+    fsdp = apply_fsdp(specs, shapes, mcfg)
+    _check_tree(fsdp, shapes, mcfg)
+    z1 = jax.tree.map(lambda sp, sh: zero1_spec(sp, sh.shape, mcfg),
+                      fsdp, shapes, is_leaf=lambda x: isinstance(x, P))
+    _check_tree(z1, shapes, mcfg)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "mamba2-130m",
+                                  "deepseek-v2-236b",
+                                  "jamba-1.5-large-398b"])
+@pytest.mark.parametrize("shape_name", ["decode_32k", "long_500k"])
+def test_cache_specs_valid(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    shapes = _shapes(cfg)
+    c_shapes = cache_shapes(cfg, shape, shapes)
+    for mcfg in MESHES:
+        specs = cache_specs(cfg, mcfg, shape.global_batch, c_shapes)
+        _check_tree(specs, c_shapes, mcfg)
+
+
+def test_tp_shards_the_big_weights():
+    """The planner must actually shard the dominant weights (not fall back
+    to replication) for TP-friendly archs."""
+    cfg = get_config("granite-3-8b")
+    specs = param_specs(cfg, SINGLE_POD_MESH)
+    g = specs["group0"]["pos0"]
+    assert g["mixer"]["wq"] == P(None, None, "model", None)
+    assert g["ffn"]["w_gate"] == P(None, None, "model")
+    assert g["ffn"]["w_down"] == P(None, "model", None)
+
+
+def test_qwen2_attention_replicates_with_note():
+    """14 heads don't divide tp=16: attention weights stay replicated and
+    the planner records why."""
+    cfg = get_config("qwen2-0.5b")
+    notes = []
+    specs = param_specs(cfg, SINGLE_POD_MESH, notes)
+    g = specs["group0"]["pos0"]
+    assert g["mixer"]["wq"] == P(None, None, None, None)
+    assert any("wq" in n for n in notes)
+    # but the FFN still shards
+    assert g["ffn"]["w_gate"] == P(None, None, "model")
+
+
+def test_moe_experts_shard_over_model_axis():
+    cfg = get_config("deepseek-v2-236b")
+    specs = param_specs(cfg, SINGLE_POD_MESH)
+    moe = specs["group1"]["pos0"]["ffn"]
+    assert moe["w_gate"] == P(None, "model", None, None)  # 160 experts / 16
+    assert moe["router"] == P(None, None, None)
+
+
+def test_zero1_adds_data_axis():
+    sp = zero1_spec(P(None, "model"), (4096, 12800), SINGLE_POD_MESH)
+    assert sp == P("data", "model")
+    # already-fsdp spec unchanged
+    sp2 = zero1_spec(P("data", "model"), (4096, 12800), SINGLE_POD_MESH)
+    assert sp2 == P("data", "model")
