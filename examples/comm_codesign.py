@@ -1,9 +1,13 @@
 """The paper-specific walkthrough: one training job through all five layers
-of the communication-optimization paradigm (Fig. 5a).
+of the communication-optimization paradigm (Fig. 5a), wired together by the
+``repro.codesign`` engine:
 
   1. Para.   — pick an architecture + mesh; emit its CommDemand
-  2. Task sched. (vertical) — overlap/priority policies vs exposed comm
-  3. CCL     — per-task algorithm selection (NCCL-style) + TACCL synthesis
+  2. Codesign (vertical) — placement onto a physical topology + per-task
+     algorithm selection priced on that topology + JCT scheduling, via
+     ``codesign.plan_iteration``
+  3. CCL     — the selection crossover in detail: closed-form AlphaBeta vs
+     topology-priced FlowSim, + TACCL-style synthesis
   4. Flow sched. (horizontal) — two jobs sharing links, CASSINI staggering
   5. Net.    — the same collective on torus vs oversubscribed fat-tree
 
@@ -15,19 +19,20 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.ccl.cost import CostParams, algo_cost
-from repro.ccl.select import select_algorithm
+from repro.ccl.select import AlphaBeta, FlowSim, select_for_task
 from repro.ccl.synth import Sketch, synthesize
+from repro.codesign import plan_iteration
 from repro.configs import ARCHS, get_config
 from repro.core.demand import CommTask
 from repro.core.demand_builder import (DemandParams, build_demand,
                                        janus_traffic_ratio)
-from repro.core.types import SHAPES_BY_NAME, SINGLE_POD_MESH
+from repro.core.types import MeshConfig, SHAPES_BY_NAME, SINGLE_POD_MESH
 from repro.net.simulate import simulate_flowset
 from repro.net.topology import dgx_cluster, fat_tree, torus2d
 from repro.ccl.algorithms import generate_flows
 from repro.sched.flows import JobProfile, stagger_jobs
-from repro.sched.tasks import simulate_iteration
+
+DP2_TP8 = MeshConfig(shape=(2, 8), axis_names=("data", "model"))
 
 
 def main():
@@ -49,32 +54,51 @@ def main():
               f"{jr['ratio']:.1f}x)")
 
     print("=" * 72)
-    print("[2] Task scheduler (vertical co-design): exposed communication")
-    cp = CostParams(alpha=1e-6, link_bw=50e9)
-
-    def cost(t):
-        if t.primitive == "all_reduce":
-            return select_algorithm(t.primitive, t.size_bytes,
-                                    len(t.group), cp)[1]
-        return algo_cost(t.primitive,
-                         "direct" if t.primitive == "all_to_all" else "ring",
-                         t.size_bytes, len(t.group), cp)
-
+    print("[2] Codesign engine: demand -> placement -> selection -> JCT")
+    topo = dgx_cluster(2)
+    print(f"    mesh {DP2_TP8.shape} (data x model) on {topo.name}")
     for pol in ("serial", "fifo", "priority", "preempt"):
-        r = simulate_iteration(dem, cost, pol)
+        r = plan_iteration(cfg, shape, DP2_TP8, topo, policy=pol)
         print(f"    {pol:9s} JCT={r.jct:7.3f}s exposed={r.exposed_comm:6.3f}s"
               f" ({100*r.comm_fraction:4.1f}%)")
+    rep = plan_iteration(cfg, shape, DP2_TP8, topo, policy="priority")
+    print("    per-primitive algorithm choices (FlowSim on the topology):")
+    for prim, hist in sorted(rep.algorithms_by_primitive().items()):
+        pick = ", ".join(f"{a} x{k}" for a, k in sorted(hist.items()))
+        print(f"      {prim:15s} {pick}")
+    print("    hottest links (bytes over one iteration):")
+    for (u, v), nbytes in rep.link_hotspots[:4]:
+        print(f"      {u!s:>7s} -> {v!s:<7s} {nbytes/2**30:8.2f} GiB")
+    strided = plan_iteration(cfg, shape, DP2_TP8, topo, policy="serial",
+                             placement="strided")
+    packed = plan_iteration(cfg, shape, DP2_TP8, topo, policy="serial")
+    print(f"    placement: packed comm {packed.comm_time:.3f}s vs strided "
+          f"{strided.comm_time:.3f}s "
+          f"({strided.comm_time/max(packed.comm_time, 1e-12):.2f}x worse)")
+    dp16 = MeshConfig(shape=(16,), axis_names=("data",),
+                      data_axes=("data",), model_axes=())
+    dpp = DemandParams(zero1=False)
+    auto = plan_iteration(cfg, shape, dp16, topo, policy="serial",
+                          dp_params=dpp)
+    ring = plan_iteration(cfg, shape, dp16, topo, policy="serial",
+                          dp_params=dpp, force={"all_reduce": "ring"})
+    print(f"    gradient AR (pure DP): auto=hierarchical comm "
+          f"{auto.comm_time:.3f}s vs forced flat ring {ring.comm_time:.3f}s "
+          f"({ring.comm_time/max(auto.comm_time, 1e-12):.2f}x)")
 
     print("=" * 72)
-    print("[3] CCL: algorithm selection per payload (ICI cost model)")
+    print("[3] CCL: algorithm selection per payload, AlphaBeta vs FlowSim")
+    ab = AlphaBeta.from_topology(topo)
+    fsim = FlowSim(topo)
+    group = tuple(topo.accelerators)
     for size in (2 ** 12, 2 ** 20, 2 ** 28):
-        best, c, costs = select_algorithm("all_reduce", size, 16, cp)
-        print(f"    all_reduce {size:>12,d} B -> {best:18s} "
-              f"({c*1e6:9.1f} us; " +
-              ", ".join(f"{k}={v*1e6:.1f}us" for k, v in costs.items())
-              + ")")
-    topo = dgx_cluster(2)
-    task = CommTask("ag", "all_gather", 2 ** 22, tuple(topo.accelerators))
+        task = CommTask("ar", "all_reduce", size, group)
+        sa = select_for_task(task, ab)
+        sf = select_for_task(task, fsim)
+        print(f"    all_reduce {size:>12,d} B -> closed-form "
+              f"{sa.algorithm:14s} ({sa.cost*1e6:9.1f} us) | topology-sim "
+              f"{sf.algorithm:14s} ({sf.cost*1e6:9.1f} us)")
+    task = CommTask("ag", "all_gather", 2 ** 22, group)
     ring_t = simulate_flowset(topo, generate_flows(task, "ring"))
     syn = synthesize(topo, task, Sketch(max_hops=4))
     print(f"    TACCL-style synthesis on DGXx2 all-gather: ring "

@@ -12,4 +12,5 @@ Three faces of the same layer:
 """
 from repro.ccl.algorithms import ALGORITHMS, generate_flows  # noqa: F401
 from repro.ccl.cost import algo_cost, CostParams  # noqa: F401
-from repro.ccl.select import select_algorithm  # noqa: F401
+from repro.ccl.select import (AlphaBeta, CostModel, FlowSim,  # noqa: F401
+                              Selection, select_algorithm, select_for_task)

@@ -16,8 +16,14 @@ from dataclasses import dataclass
 @dataclass(frozen=True)
 class CostParams:
     alpha: float = 5e-6          # per-step latency (s)
-    link_bw: float = 50e9        # bytes/s per link
+    link_bw: float = 50e9        # bytes/s per link (intra-host when hierarchical)
     reduce_flops_bw: float = 0.0  # 0 = ignore reduction compute
+    # hierarchy (the "Intra-Inter" setting): 0 = flat single-tier fabric.
+    # When gpus_per_host > 1, link_bw is the intra-host (NVLink) bandwidth
+    # and inter_bw the per-host NIC bandwidth, enabling the `hierarchical`
+    # all-reduce closed form.
+    inter_bw: float = 0.0        # bytes/s across hosts (0 = link_bw)
+    gpus_per_host: int = 0       # accelerators per host (0 = no hierarchy)
 
 
 def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
@@ -43,6 +49,22 @@ def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
             c = p // r
             steps = 2 * (r - 1) + 2 * (c - 1)
             return steps * a + 2 * (p - 1) / p * n / b
+        if algorithm == "hierarchical":
+            # intra-host ring reduce-scatter -> shard relay to the host
+            # leader -> ring all-reduce over one leader per host on the NIC
+            # tier -> relay back -> intra-host ring all-gather.
+            m = cp.gpus_per_host
+            if m <= 1 or p <= m or p % m:
+                raise KeyError(
+                    f"hierarchical all-reduce needs gpus_per_host dividing "
+                    f"p with >=2 hosts; got p={p}, gpus_per_host={m}")
+            hcount = p // m
+            b_inter = cp.inter_bw or b
+            intra = 2 * ((m - 1) * a + (m - 1) / m * n / b)     # RS + AG
+            relay = 2 * (a + (m - 1) / m * n / b)               # to/from leader
+            inter = 2 * (hcount - 1) * a \
+                + 2 * (hcount - 1) / hcount * n / b_inter       # leader ring AR
+            return intra + relay + inter
     if primitive in ("all_gather", "reduce_scatter"):
         # n = TOTAL payload (the gathered size / the pre-reduce size)
         if algorithm == "ring":

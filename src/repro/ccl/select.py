@@ -1,32 +1,262 @@
-"""NCCL-style algorithm auto-selection.
+"""NCCL-style algorithm auto-selection behind a CostModel protocol.
 
 NCCL "dynamically selects established algorithms based on different
 situations" (paper Sec. III-B): small payloads favour latency-optimal
 algorithms (tree / halving-doubling), large payloads favour bandwidth-
-optimal rings.  We reproduce that behaviour with the alpha-beta models and
-expose the crossover — benchmarks/collectives.py plots it per topology.
+optimal rings.  The seed reproduced that with flat alpha-beta closed forms;
+this module generalizes pricing behind a :class:`CostModel` protocol so the
+CCL layer can consult the network layer (the paper's Sec. II-E co-design
+gap):
+
+  * :class:`AlphaBeta` — the original closed forms (`repro.ccl.cost`),
+    kept exact, optionally hierarchy-aware via ``CostParams.gpus_per_host``;
+  * :class:`FlowSim`  — generates the candidate algorithm's actual flow
+    schedule (`repro.ccl.algorithms`) and prices it on a real
+    ``net.Topology`` with ``net.simulate.simulate_flowset``, memoized on
+    ``(primitive, algorithm, size, group)`` so selection over a 40-layer
+    demand stays sub-second.
+
+``select_algorithm`` keeps the seed's signature (AlphaBeta under the hood);
+``select_for_task`` is the topology-aware entry point the codesign driver
+uses.
 """
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+import dataclasses
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Protocol, Tuple
 
-from repro.ccl.algorithms import ALGORITHMS
+from repro.ccl.algorithms import ALGORITHMS, generate_flows
 from repro.ccl.cost import CostParams, algo_cost
+from repro.core.demand import CommTask, FlowSet
+from repro.net.simulate import simulate_flowset
+from repro.net.topology import Topology
+
+
+# ---------------------------------------------------------------------------
+# Eligibility guards (structural: independent of the cost model)
+# ---------------------------------------------------------------------------
+
+
+def is_square(p: int) -> bool:
+    """Exact perfect-square test.  ``int(p ** 0.5)`` mis-rounds for large
+    perfect squares (float sqrt of a non-representable int); ``math.isqrt``
+    is exact."""
+    return p >= 0 and math.isqrt(p) ** 2 == p
+
+
+def structurally_eligible(algorithm: str, p: int) -> bool:
+    """Group-shape guards that hold regardless of how costs are computed."""
+    if algorithm == "halving_doubling" and p & (p - 1):
+        return False  # needs power-of-two
+    if algorithm == "torus2d" and not is_square(p):
+        return False  # needs a square grid layout
+    return True
+
+
+# ---------------------------------------------------------------------------
+# CostModel protocol + implementations
+# ---------------------------------------------------------------------------
+
+
+class CostModel(Protocol):
+    """What the selection layer needs from a pricing backend."""
+
+    def supports(self, task: CommTask, algorithm: str) -> bool:
+        """Model-specific eligibility (beyond the structural guards)."""
+        ...
+
+    def cost(self, task: CommTask, algorithm: str) -> float:
+        """Predicted completion time (seconds) of ``algorithm`` on ``task``."""
+        ...
+
+
+# When a flat algorithm's group spans hosts on a hierarchical fabric, its
+# crossing traffic is bottlenecked by the per-host NIC, shared by this many
+# concurrent crossing flows per step (None = one per host GPU, i.e.
+# gpus_per_host): a bidirectional ring crosses each NIC twice; recursive
+# halving/doubling and direct all-to-all cross with every host member at
+# once, and a 2D torus's parallel sub-rings each cross on the column phase.
+# Algorithms not listed cross once per step (plain rings, trees).
+_NIC_SHARING = {"bidir_ring": 2.0, "halving_doubling": None, "direct": None,
+                "torus2d": None}
+
+
+def _hierarchical_partition_ok(topo: Topology, group: Tuple[int, ...]
+                               ) -> bool:
+    """The hierarchical decomposition needs the (placed) group to split
+    into >=2 equal-size hosts of >=2 members each."""
+    hosts = topo.host_groups(group)
+    sizes = {len(h) for h in hosts}
+    return len(hosts) > 1 and len(sizes) == 1 and sizes != {1}
+
+
+@dataclass(frozen=True)
+class AlphaBeta:
+    """Closed-form alpha-beta pricing.  For flat ``CostParams`` this is the
+    seed's behaviour, kept exact.  With hierarchy params set
+    (``gpus_per_host``/``inter_bw``), flat algorithms whose group spans
+    hosts are priced at the NIC-tier bottleneck (divided by the
+    algorithm's NIC-sharing factor) instead of the intra-host bandwidth —
+    otherwise the closed forms would never let ``hierarchical`` win."""
+
+    params: CostParams = CostParams()
+    # set by from_topology: enables the physical host-partition eligibility
+    # check for groups that are already placed onto real devices (the
+    # divisibility heuristic alone would accept e.g. a 16-rank group strided
+    # over 3 hosts, which the flow generator then rejects)
+    topo: Optional[Topology] = None
+
+    def supports(self, task: CommTask, algorithm: str) -> bool:
+        if algorithm == "hierarchical":
+            if self.topo is not None:
+                return _hierarchical_partition_ok(self.topo, task.group)
+            m = self.params.gpus_per_host
+            p = len(task.group)
+            return m > 1 and p > m and p % m == 0
+        return True
+
+    def cost(self, task: CommTask, algorithm: str) -> float:
+        cp = self.params
+        p = len(task.group)
+        if algorithm == "hierarchical" and self.topo is not None:
+            # the placed group's actual per-host size, not the nominal one
+            m = len(self.topo.host_groups(task.group)[0])
+            if m != cp.gpus_per_host:
+                cp = dataclasses.replace(cp, gpus_per_host=m)
+        elif (algorithm != "hierarchical" and cp.gpus_per_host > 1
+                and p > cp.gpus_per_host and cp.inter_bw):
+            share = _NIC_SHARING.get(algorithm, 1.0) or cp.gpus_per_host
+            cp = dataclasses.replace(cp, link_bw=cp.inter_bw / share)
+        return algo_cost(task.primitive, algorithm, task.size_bytes, p, cp)
+
+    @classmethod
+    def from_topology(cls, topo: Topology, alpha: float = None) -> "AlphaBeta":
+        """Derive flat-or-hierarchical CostParams from a Topology: intra
+        bandwidth = bottleneck link between two co-hosted accelerators,
+        inter bandwidth = bottleneck across hosts.  Topologies without host
+        structure get the bottleneck bandwidth of an adjacent pair."""
+        accel = topo.accelerators
+        if len(accel) < 2:
+            return cls(CostParams())
+
+        def bottleneck(u, v) -> float:
+            return min(topo.link_bw(a, b) for a, b in topo.path_links(u, v))
+
+        def lat(u, v) -> float:
+            return sum(topo.graph[a][b]["lat"]
+                       for a, b in topo.path_links(u, v))
+
+        sizes = {len(h) for h in topo.hosts}
+        if topo.hosts and sizes == {len(topo.hosts[0])} \
+                and len(topo.hosts) > 1 and len(topo.hosts[0]) > 1:
+            h0, h1 = topo.hosts[0], topo.hosts[1]
+            intra_bw = bottleneck(h0[0], h0[1])
+            inter_bw = bottleneck(h0[0], h1[0])
+            a = alpha if alpha is not None else max(lat(h0[0], h1[0]), 1e-7)
+            return cls(CostParams(alpha=a, link_bw=intra_bw,
+                                  inter_bw=inter_bw,
+                                  gpus_per_host=len(h0)), topo=topo)
+        a = alpha if alpha is not None else max(lat(accel[0], accel[1]), 1e-7)
+        return cls(CostParams(alpha=a,
+                              link_bw=bottleneck(accel[0], accel[1])),
+                   topo=topo)
+
+
+class FlowSim:
+    """Prices a candidate algorithm by generating its FlowSet and simulating
+    it on the actual topology — the CCL layer asking the network layer
+    instead of assuming a flat link (the paper's vertical co-design arrow).
+
+    Both the generated flowsets and the simulated costs are memoized on
+    ``(primitive, algorithm, size_bytes, group)``: a 40-layer demand repeats
+    a handful of unique (size, group) keys, so end-to-end selection stays
+    sub-second."""
+
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self._cost_memo: Dict[Tuple, float] = {}
+        self._flow_memo: Dict[Tuple, FlowSet] = {}
+
+    def _key(self, task: CommTask, algorithm: str) -> Tuple:
+        return (task.primitive, algorithm, task.size_bytes, task.group)
+
+    def supports(self, task: CommTask, algorithm: str) -> bool:
+        if algorithm == "hierarchical":
+            return _hierarchical_partition_ok(self.topo, task.group)
+        return True
+
+    def flowset(self, task: CommTask, algorithm: str) -> FlowSet:
+        key = self._key(task, algorithm)
+        if key not in self._flow_memo:
+            self._flow_memo[key] = flows_on_topology(
+                self.topo, task, algorithm)
+        return self._flow_memo[key]
+
+    def cost(self, task: CommTask, algorithm: str) -> float:
+        key = self._key(task, algorithm)
+        if key not in self._cost_memo:
+            self._cost_memo[key] = simulate_flowset(
+                self.topo, self.flowset(task, algorithm))
+        return self._cost_memo[key]
+
+
+def flows_on_topology(topo: Topology, task: CommTask,
+                      algorithm: str) -> FlowSet:
+    """`generate_flows`, but topology-aware: hierarchical algorithms get the
+    physical host partition of the task's (placed) group."""
+    if algorithm == "hierarchical":
+        return generate_flows(task, algorithm,
+                              hosts=topo.host_groups(task.group))
+    return generate_flows(task, algorithm)
+
+
+# ---------------------------------------------------------------------------
+# Selection
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Selection:
+    """Outcome of pricing every eligible candidate for one task."""
+
+    algorithm: str
+    cost: float
+    costs: Dict[str, float] = field(default_factory=dict)
+    excluded: List[str] = field(default_factory=list)
+
+
+def select_for_task(task: CommTask, model: CostModel,
+                    allow: Optional[Tuple[str, ...]] = None) -> Selection:
+    """Pick the cheapest eligible algorithm for ``task`` under ``model``."""
+    p = len(task.group)
+    costs: Dict[str, float] = {}
+    excluded: List[str] = []
+    for name in ALGORITHMS[task.primitive]:
+        if allow and name not in allow:
+            continue
+        if not structurally_eligible(name, p) or \
+                not model.supports(task, name):
+            excluded.append(name)
+            continue
+        costs[name] = model.cost(task, name)
+    if not costs:
+        raise ValueError(
+            f"no eligible algorithm for primitive {task.primitive!r} with "
+            f"group size p={p}: registered="
+            f"{list(ALGORITHMS[task.primitive])}, allow={allow}, "
+            f"excluded by eligibility guards={excluded}")
+    best = min(costs, key=costs.get)
+    return Selection(best, costs[best], costs, excluded)
 
 
 def select_algorithm(primitive: str, size_bytes: int, p: int,
                      cp: CostParams,
                      allow: Optional[Tuple[str, ...]] = None
                      ) -> Tuple[str, float, Dict[str, float]]:
-    """Returns (best_algorithm, predicted_cost, all_costs)."""
-    costs = {}
-    for name in ALGORITHMS[primitive]:
-        if allow and name not in allow:
-            continue
-        if name == "halving_doubling" and p & (p - 1):
-            continue  # needs power-of-two
-        if name == "torus2d" and int(p ** 0.5) ** 2 != p:
-            continue  # needs a square grid layout
-        costs[name] = algo_cost(primitive, name, size_bytes, p, cp)
-    best = min(costs, key=costs.get)
-    return best, costs[best], costs
+    """Seed-compatible entry point: alpha-beta pricing over a logical
+    ``range(p)`` group.  Returns (best_algorithm, predicted_cost, all_costs)."""
+    task = CommTask("select", primitive, size_bytes, tuple(range(p)))
+    sel = select_for_task(task, AlphaBeta(cp), allow=allow)
+    return sel.algorithm, sel.cost, sel.costs

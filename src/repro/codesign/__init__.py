@@ -1,0 +1,42 @@
+"""Cross-layer co-design engine (paper Sec. II-E / IV-A).
+
+The survey's central observation is that the three layers of the training
+communication stack — parallelization strategy, collective communication
+library, and network — are "relatively independent", and that *vertical
+co-design* across them is the open opportunity.  This package wires them
+together:
+
+``placement``
+    Maps logical mesh coordinates (``core.types.MeshConfig``) onto the
+    physical accelerators of a ``net.Topology`` so every ``CommTask.group``
+    names real devices.  Conventions:
+
+    * Logical global ranks are **row-major** over ``MeshConfig.shape``
+      with the **model axis innermost** (the MeshConfig default), so
+      ``packed`` placement puts each TP communicator on consecutive
+      physical devices — one host, on DGX/fat-tree topologies.
+    * ``strided`` round-robins ranks across hosts (the anti-pattern
+      baseline); ``custom`` takes an explicit rank -> device tuple.
+    * The demand builder emits one *representative* communicator per mesh
+      axis (all replicas run the same collective concurrently);
+      ``CommTask.axis`` ("model" / "data") tells placement which axis a
+      group spans, and ``replica=`` selects which concrete communicator
+      stands in for it.
+
+``driver``
+    ``plan_iteration(cfg, shape, mesh, topo, policy)`` runs demand ->
+    placement -> per-task algorithm selection (via ``ccl.select``'s
+    CostModel protocol: closed-form ``AlphaBeta`` or topology-priced
+    ``FlowSim``) -> ``sched.simulate_iteration``, and returns a
+    ``CodesignReport`` with JCT, exposed communication, per-task algorithm
+    choices and per-link hot spots.
+
+Not yet integrated (see ROADMAP.md Open items): the "Horizontal" flow
+scheduler (multi-job CASSINI staggering happens in ``sched.flows`` but
+``plan_iteration`` plans a single job) and "Host-Net" in-network
+aggregation (``sched.atp`` models it but the driver does not offer it as a
+selection candidate).
+"""
+from repro.codesign.placement import Placement, place_mesh  # noqa: F401
+from repro.codesign.driver import (CodesignReport, TaskChoice,  # noqa: F401
+                                   plan_iteration)

@@ -1,0 +1,172 @@
+"""End-to-end co-design driver: demand -> placement -> selection -> JCT.
+
+``plan_iteration`` is the vertical slice through all five layers of the
+paper's paradigm (Fig. 5a) with the cross-layer arrows actually wired:
+
+  Para.   build_demand(cfg, shape, mesh)          logical CommDemand
+  Place.  place_mesh(mesh, topo).place_demand()   physical device groups
+  CCL     select_for_task(task, CostModel)        per-task algorithm
+  Net.    FlowSim prices candidates on the real topology
+  Sched.  simulate_iteration(...)                 JCT + exposed comm
+
+The result is a :class:`CodesignReport`: JCT, exposed communication,
+per-task algorithm choices and per-link hot spots — everything the layers
+above and below would need to renegotiate (the paper's Sec. IV-A open
+opportunity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple, Union
+
+from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
+                              flows_on_topology, select_for_task)
+from repro.core.demand_builder import DemandParams, build_demand
+from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
+from repro.net.simulate import link_utilization
+from repro.net.topology import Topology
+from repro.sched.tasks import Policy, SimResult, simulate_iteration
+
+from repro.codesign.placement import Placement, place_mesh
+
+
+@dataclass
+class TaskChoice:
+    """One comm task's resolved placement + algorithm selection."""
+
+    task_id: str
+    primitive: str
+    size_bytes: int
+    group: Tuple[int, ...]
+    algorithm: str
+    cost_s: float
+    costs: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class CodesignReport:
+    """What the co-design pipeline hands back up the stack."""
+
+    jct: float
+    exposed_comm: float
+    compute_time: float
+    comm_time: float
+    policy: str
+    cost_model: str
+    placement: Placement
+    choices: List[TaskChoice] = field(default_factory=list)
+    link_hotspots: List[Tuple[Tuple, float]] = field(default_factory=list)
+    sim: Optional[SimResult] = None
+
+    @property
+    def comm_fraction(self) -> float:
+        return self.exposed_comm / self.jct if self.jct else 0.0
+
+    def algorithms_by_primitive(self) -> Dict[str, Dict[str, int]]:
+        """primitive -> {algorithm: task count} histogram."""
+        out: Dict[str, Dict[str, int]] = {}
+        for c in self.choices:
+            hist = out.setdefault(c.primitive, {})
+            hist[c.algorithm] = hist.get(c.algorithm, 0) + 1
+        return out
+
+
+def _resolve_cost_model(cost_model: Union[str, CostModel],
+                        topo: Topology) -> Tuple[CostModel, str]:
+    if not isinstance(cost_model, str):
+        return cost_model, type(cost_model).__name__.lower()
+    if cost_model == "flowsim":
+        return FlowSim(topo), "flowsim"
+    if cost_model == "alphabeta":
+        return AlphaBeta.from_topology(topo), "alphabeta"
+    raise ValueError(f"unknown cost model {cost_model!r} "
+                     f"(flowsim | alphabeta | a CostModel instance)")
+
+
+def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
+                   topo: Topology, policy: Policy = "priority",
+                   placement: Union[str, Placement] = "packed",
+                   cost_model: Union[str, CostModel] = "flowsim",
+                   dp_params: DemandParams = DemandParams(),
+                   allow: Optional[Tuple[str, ...]] = None,
+                   force: Optional[Dict[str, str]] = None,
+                   hotspot_k: int = 8) -> CodesignReport:
+    """Run one training iteration through the full co-design pipeline.
+
+    ``placement``: a strategy name (packed/strided) or a pre-built
+    Placement.  ``cost_model``: "flowsim" (price candidates on ``topo``),
+    "alphabeta" (closed forms with params derived from ``topo``), or any
+    CostModel.  ``force``: primitive -> algorithm overrides (e.g.
+    ``{"all_reduce": "ring"}`` to measure what topology-blind flat-ring
+    selection costs).  ``allow``: whitelist forwarded to selection."""
+    pl = placement if isinstance(placement, Placement) else \
+        place_mesh(mesh, topo, strategy=placement)
+    model, model_name = _resolve_cost_model(cost_model, topo)
+
+    demand = build_demand(cfg, shape, mesh, dp_params)
+    placed = pl.place_demand(demand)
+
+    # Per-task selection, memoized on the selection key — a 40-layer demand
+    # repeats a handful of unique (primitive, size, group) combinations.
+    sel_memo: Dict[Tuple, Selection] = {}
+    choices: Dict[str, TaskChoice] = {}
+    for task in placed.comm_tasks:
+        key = (task.primitive, task.size_bytes, task.group)
+        sel = sel_memo.get(key)
+        if sel is None:
+            forced = force.get(task.primitive) if force else None
+            task_allow = (forced,) if forced else allow
+            sel = select_for_task(task, model, allow=task_allow)
+            sel_memo[key] = sel
+        choices[task.task_id] = TaskChoice(
+            task.task_id, task.primitive, task.size_bytes, task.group,
+            sel.algorithm, sel.cost, sel.costs)
+
+    def comm_cost(task):
+        c = choices[task.task_id]
+        return c.cost_s, c.algorithm
+
+    sim = simulate_iteration(placed, comm_cost, policy)
+
+    # Hot-spot map.  The JCT simulation above prices one *representative*
+    # communicator per task (all replicas along an axis run the same
+    # collective concurrently), but the per-link byte map must cover every
+    # replica or whole hosts would look idle.  Flowsets are memoized on the
+    # same (primitive, algorithm, size, group) key selection dedups on.
+    def replicas_of(task):
+        if task.axis == "model":
+            return len(pl.model_groups())
+        if task.axis == "data":
+            return len(pl.data_groups())
+        return 1
+
+    util: Dict[Tuple, float] = {}
+    fs_memo: Dict[Tuple, object] = {}
+    for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
+        algo = choices[ptask.task_id].algorithm
+        for r in range(replicas_of(ltask)):
+            group = ptask.group if r == 0 else \
+                pl.place_group(ltask.group, ltask.axis, replica=r)
+            key = (ltask.primitive, algo, ltask.size_bytes, group)
+            fs = fs_memo.get(key)
+            if fs is None:
+                replica = dataclasses.replace(ptask, group=group)
+                try:
+                    fs = flows_on_topology(topo, replica, algo)
+                except ValueError:
+                    # replica-r's group can be shaped differently from the
+                    # representative's (irregular placement); skip rather
+                    # than mis-attribute its bytes
+                    continue
+                fs_memo[key] = fs
+            for link, nbytes in link_utilization(topo, fs).items():
+                util[link] = util.get(link, 0.0) + nbytes
+    hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:hotspot_k]
+
+    return CodesignReport(
+        jct=sim.jct, exposed_comm=sim.exposed_comm,
+        compute_time=sim.compute_time, comm_time=sim.comm_time,
+        policy=policy, cost_model=model_name, placement=pl,
+        choices=[choices[t.task_id] for t in placed.comm_tasks],
+        link_hotspots=hotspots, sim=sim)

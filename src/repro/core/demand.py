@@ -36,6 +36,10 @@ class CommTask:
     # the "deadline" notion from the paper's Fig. 5(b) case study.
     slack: float = 0.0
     job_id: str = "job0"
+    # which logical mesh axis the communicator spans ("model" / "data" /
+    # "all" / None).  The codesign placement layer uses it to resolve the
+    # logical group onto physical devices without guessing from group size.
+    axis: Optional[str] = None
 
 
 @dataclass(frozen=True)

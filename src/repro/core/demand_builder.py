@@ -100,7 +100,7 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                 f"tp_fwd{i}", "all_reduce", tp_ar_bytes,
                 tuple(range(tp)), after_compute=(f"fwd{i}",),
                 before_compute=f"fwd{i+1}" if i + 1 < len(specs) else "head",
-                job_id=demand.job_id))
+                job_id=demand.job_id, axis="model"))
         if spec.ffn == "moe" and tp > 1:
             a2a = int(tokens_dev * cfg.top_k * d * dp_params.act_bytes
                       * dp_params.capacity_factor)
@@ -108,7 +108,7 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                 f"a2a_fwd{i}", "all_to_all", 2 * a2a,  # dispatch+combine
                 tuple(range(tp)), after_compute=(f"fwd{i}",),
                 before_compute=f"fwd{i+1}" if i + 1 < len(specs) else "head",
-                job_id=demand.job_id))
+                job_id=demand.job_id, axis="model"))
 
     head_flops = fwd_mult * cfg.padded_vocab * d * tokens / chips
     demand.compute_tasks.append(ComputeTask(
@@ -128,7 +128,7 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                 f"tp_bwd{i}", "all_reduce", tp_ar_bytes,
                 tuple(range(tp)), after_compute=(f"bwd{i}",),
                 before_compute=f"bwd{i-1}" if i else "opt",
-                job_id=demand.job_id))
+                job_id=demand.job_id, axis="model"))
         if spec.ffn == "moe" and tp > 1:
             a2a = int(tokens_dev * cfg.top_k * d * dp_params.act_bytes
                       * dp_params.capacity_factor)
@@ -136,7 +136,7 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                 f"a2a_bwd{i}", "all_to_all", 2 * a2a,
                 tuple(range(tp)), after_compute=(f"bwd{i}",),
                 before_compute=f"bwd{i-1}" if i else "opt",
-                job_id=demand.job_id))
+                job_id=demand.job_id, axis="model"))
         if dp > 1:
             # gradient sync: overlappable (blocks only the optimizer);
             # slack = how much bwd compute remains to hide behind
@@ -151,7 +151,7 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                     f"grad{i}.{ci}", prim, grad_bytes // nchunks,
                     tuple(range(dp)), after_compute=(f"bwd{i}",),
                     before_compute="opt", slack=remaining,
-                    job_id=demand.job_id))
+                    job_id=demand.job_id, axis="data"))
 
     opt_flops = 10 * pc["total"] / chips  # elementwise AdamW
     demand.compute_tasks.append(ComputeTask(

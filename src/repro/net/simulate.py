@@ -50,8 +50,7 @@ def _route_bytes(topo: Topology, flows: Iterable[Flow],
                         seen_downstream.add((u, v))
                 else:
                     link_bytes[(u, v)] += f.size_bytes
-                if not merged and u in aggregate_at or (
-                        not merged and v in aggregate_at):
+                if not merged and (u in aggregate_at or v in aggregate_at):
                     merged = True
         # (approximation: payload sizes equal within a group)
     return link_bytes

@@ -17,11 +17,18 @@ import networkx as nx
 @dataclass
 class Topology:
     """Directed multigraph of GPUs/TPUs (+switch nodes) with per-link
-    bandwidth (bytes/s) and latency (s)."""
+    bandwidth (bytes/s) and latency (s).
+
+    ``hosts`` partitions the accelerators into physical hosts (empty = no
+    host structure, e.g. a TPU torus where every chip talks ICI directly).
+    The codesign layer uses it for placement and for hierarchical
+    (intra-host / inter-host) collective decomposition.
+    """
 
     graph: nx.DiGraph
     name: str = "custom"
     accelerators: Tuple[int, ...] = ()
+    hosts: Tuple[Tuple[int, ...], ...] = ()
 
     # ------------------------------------------------------------------
     def link_bw(self, u, v) -> float:
@@ -34,9 +41,52 @@ class Topology:
         """Latency-weighted shortest path (list of nodes)."""
         return nx.shortest_path(self.graph, src, dst, weight="lat")
 
-    def path_links(self, src, dst) -> List[Tuple]:
-        p = self.path(src, dst)
-        return list(zip(p[:-1], p[1:]))
+    def path_links(self, src, dst) -> Tuple[Tuple, ...]:
+        """Links of the latency-weighted shortest path, memoized — the flow
+        simulator queries the same pairs for every step of a schedule.
+        (Assumes the graph is not mutated after the first query.)"""
+        cache = self.__dict__.setdefault("_path_cache", {})
+        key = (src, dst)
+        if key not in cache:
+            p = self.path(src, dst)
+            cache[key] = tuple(zip(p[:-1], p[1:]))
+        return cache[key]
+
+    # ------------------------------------------------------------------
+    # Host / switch structure (codesign + ATP consumers)
+    # ------------------------------------------------------------------
+
+    def switch_nodes(self) -> Tuple:
+        """Non-accelerator nodes (ToR/Agg/Core switches, host NICs, DCN
+        routers) — the candidates for in-network aggregation."""
+        accel = set(self.accelerators)
+        return tuple(n for n in self.graph.nodes if n not in accel)
+
+    def host_of(self, device) -> int:
+        """Index into ``hosts`` of the host owning ``device`` (-1 if the
+        topology has no host structure or the device is unassigned)."""
+        lookup = self.__dict__.get("_host_lookup")
+        if lookup is None:
+            lookup = {d: h for h, devs in enumerate(self.hosts)
+                      for d in devs}
+            self.__dict__["_host_lookup"] = lookup
+        return lookup.get(device, -1)
+
+    def host_groups(self, group: Iterable[int]
+                    ) -> Tuple[Tuple[int, ...], ...]:
+        """Partition ``group`` (physical device ids) by host, preserving
+        the group's order within each host.  Devices without a host each
+        form a singleton."""
+        buckets: Dict[int, List[int]] = {}
+        order: List[int] = []
+        for i, d in enumerate(group):
+            h = self.host_of(d)
+            key = h if h >= 0 else -(i + 2)  # unassigned: unique bucket
+            if key not in buckets:
+                buckets[key] = []
+                order.append(key)
+            buckets[key].append(d)
+        return tuple(tuple(buckets[k]) for k in order)
 
     def bisection_bw(self) -> float:
         """Max-flow bandwidth across a node-count bisection of the
@@ -138,16 +188,20 @@ def fat_tree(num_hosts: int, gpus_per_host: int = 8,
     for p in range(num_pods):
         _bilink(g, f"agg{p}", core, core_bw / oversub, lat)
     gid = 0
+    hosts = []
     for h in range(num_hosts):
         tor = f"tor{h // hosts_per_rack}"
         nic = f"host{h}"
         _bilink(g, nic, tor, nic_bw, lat)
+        members = []
         for _ in range(gpus_per_host):
             _bilink(g, gid, nic, pcie_bw, 5e-7)
             accel.append(gid)
+            members.append(gid)
             gid += 1
+        hosts.append(tuple(members))
     return Topology(g, name=f"fattree_h{num_hosts}",
-                    accelerators=tuple(accel))
+                    accelerators=tuple(accel), hosts=tuple(hosts))
 
 
 def dgx_cluster(num_hosts: int, gpus_per_host: int = 8,
@@ -157,11 +211,13 @@ def dgx_cluster(num_hosts: int, gpus_per_host: int = 8,
     NICs into a single switch (slow) — the "Intra-Inter" heterogeneity."""
     g = _new_graph()
     accel = []
+    hosts = []
     sw = "switch"
     for h in range(num_hosts):
         base = h * gpus_per_host
         gpus = list(range(base, base + gpus_per_host))
         accel.extend(gpus)
+        hosts.append(tuple(gpus))
         # ring
         for i in range(gpus_per_host):
             _bilink(g, gpus[i], gpus[(i + 1) % gpus_per_host], nvlink_bw, lat)
@@ -173,7 +229,8 @@ def dgx_cluster(num_hosts: int, gpus_per_host: int = 8,
         _bilink(g, nic, sw, nic_bw, 2e-6)
         for gpu in gpus:
             _bilink(g, gpu, nic, nic_bw, 1e-6)
-    return Topology(g, name=f"dgx_h{num_hosts}", accelerators=tuple(accel))
+    return Topology(g, name=f"dgx_h{num_hosts}", accelerators=tuple(accel),
+                    hosts=tuple(hosts))
 
 
 def tpu_pod(multi_pod: bool = False, ici_bw: float = 50e9,

@@ -41,7 +41,7 @@ def atp_traffic(topo: Topology, task: CommTask, ps_node,
     (None = unlimited); beyond it, flows fall back to host aggregation —
     ATP's multi-tenant degradation."""
     fs = host_aggregation_flows(task, ps_node)
-    switches = {n for n in topo.graph.nodes if isinstance(n, str)}
+    switches = set(topo.switch_nodes())
     base_bytes = sum(link_utilization(topo, fs).values())
     base_time = simulate_flowset(topo, fs)
 

@@ -102,7 +102,6 @@ def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8
 
     best = base_phases
     best_val = badness(base)
-    choices = [tuple(0.0 for _ in jobs)]
     grids = [[i / grid * j.period for i in range(grid)] for j in jobs[1:]]
     for combo in itertools.product(*grids):
         phases = (0.0, *combo)

@@ -39,6 +39,10 @@ class SimResult:
     comm_time: float
     exposed_comm: float
     timeline: List[Tuple[str, float, float]] = field(default_factory=list)
+    # per-task answers from the CCL layer, recorded when ``comm_cost``
+    # returns (seconds, algorithm) pairs (the codesign driver does)
+    algo_choices: Dict[str, str] = field(default_factory=dict)
+    task_comm_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def comm_fraction(self) -> float:
@@ -56,11 +60,13 @@ def _pick(policy: Policy, ready: List[CommTask], arrival: Dict[str, int]
 
 
 def simulate_iteration(demand: CommDemand,
-                       comm_cost: Callable[[CommTask], float],
+                       comm_cost: Callable[[CommTask], object],
                        policy: Policy = "priority") -> SimResult:
     """Simulate one iteration.  ``comm_cost`` maps a CommTask to seconds —
     the CCL+network layers' answer, i.e. the cross-layer information
-    exchange arrow of the five-layer paradigm."""
+    exchange arrow of the five-layer paradigm.  It may instead return a
+    ``(seconds, algorithm_name)`` pair; the chosen algorithm is then
+    recorded in ``SimResult.algo_choices`` for the codesign report."""
     comm_tasks = list(demand.comm_tasks)
     arrival = {t.task_id: i for i, t in enumerate(comm_tasks)}
     blockers: Dict[str, List[str]] = {}
@@ -78,6 +84,8 @@ def simulate_iteration(demand: CommDemand,
     exposed = 0.0
     comm_total = 0.0
     timeline: List[Tuple[str, float, float]] = []
+    algo_choices: Dict[str, str] = {}
+    task_comm_s: Dict[str, float] = {}
 
     def ready_comms() -> List[CommTask]:
         return [t for t in comm_tasks
@@ -94,8 +102,15 @@ def simulate_iteration(demand: CommDemand,
             return
         task = _pick(policy, ready, arrival)
         if task.task_id not in dur_left:
-            dur_left[task.task_id] = comm_cost(task)
-            comm_total += dur_left[task.task_id]
+            priced = comm_cost(task)
+            if isinstance(priced, tuple):
+                dur, algo = priced
+                algo_choices[task.task_id] = algo
+            else:
+                dur = priced
+            dur_left[task.task_id] = dur
+            task_comm_s[task.task_id] = dur
+            comm_total += dur
         dur = dur_left[task.task_id]
         ready_at = max((done_compute[c] for c in task.after_compute),
                        default=0.0)
@@ -186,4 +201,5 @@ def simulate_iteration(demand: CommDemand,
     compute_time = sum(c.duration for c in demand.compute_tasks)
     return SimResult(jct=jct, compute_time=compute_time,
                      comm_time=comm_total, exposed_comm=exposed,
-                     timeline=timeline)
+                     timeline=timeline, algo_choices=algo_choices,
+                     task_comm_s=task_comm_s)

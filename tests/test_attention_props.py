@@ -110,7 +110,8 @@ def test_rope_relative_property():
         return float(jnp.sum(qm * kn))
 
     assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), rel=1e-4)
-    assert dot_at(17, 0) == pytest.approx(dot_at(1017, 1000), rel=1e-4)
+    # f32 cos/sin at position ~1000 carries ~2e-4 relative rounding error
+    assert dot_at(17, 0) == pytest.approx(dot_at(1017, 1000), rel=1e-3)
 
 
 def test_softmax_rows_sum_to_one_under_padding():

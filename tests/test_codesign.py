@@ -1,0 +1,295 @@
+"""Codesign engine: placement, CostModel protocol, hierarchical collectives,
+selection guards, and the end-to-end plan_iteration pipeline."""
+import time
+
+import pytest
+
+from repro.ccl.algorithms import generate_flows
+from repro.ccl.cost import CostParams, algo_cost
+from repro.ccl.select import (AlphaBeta, FlowSim, is_square, select_algorithm,
+                              select_for_task, structurally_eligible)
+from repro.codesign import Placement, place_mesh, plan_iteration
+from repro.configs import get_config
+from repro.core.demand import CommTask
+from repro.core.demand_builder import DemandParams, build_demand
+from repro.core.types import MeshConfig, SHAPES_BY_NAME
+from repro.net.topology import dgx_cluster, fat_tree, torus2d
+
+DP16 = MeshConfig(shape=(16,), axis_names=("data",), data_axes=("data",),
+                  model_axes=())
+DP2_TP8 = MeshConfig(shape=(2, 8), axis_names=("data", "model"))
+SHAPE = SHAPES_BY_NAME["train_4k"]
+
+
+# ---------------------------------------------------------------------------
+# selection guards (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_candidate_set_raises_descriptive_error():
+    # p=3 excludes halving_doubling (not a power of two); allow-listing only
+    # it must fail with a message naming the primitive, p, and the guards
+    with pytest.raises(ValueError) as ei:
+        select_algorithm("all_reduce", 2 ** 20, 3, CostParams(),
+                         allow=("halving_doubling",))
+    msg = str(ei.value)
+    assert "all_reduce" in msg and "p=3" in msg and "halving_doubling" in msg
+
+
+def test_square_guard_uses_exact_isqrt():
+    r = 2 ** 60 + 3
+    p = r * r
+    assert int(p ** 0.5) ** 2 != p  # the seed's float guard mis-rounds here
+    assert is_square(p)
+    assert not is_square(p + 1)
+    assert structurally_eligible("torus2d", p)
+    assert not structurally_eligible("torus2d", p + 1)
+    assert not structurally_eligible("halving_doubling", 12)
+
+
+def test_select_for_task_matches_legacy_entry_point():
+    cp = CostParams(alpha=2e-6, link_bw=40e9)
+    for size in (2 ** 12, 2 ** 24):
+        legacy = select_algorithm("all_reduce", size, 16, cp)
+        task = CommTask("t", "all_reduce", size, tuple(range(16)))
+        sel = select_for_task(task, AlphaBeta(cp))
+        assert legacy == (sel.algorithm, sel.cost, sel.costs)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical all-reduce (satellite: wire bytes + decomposition)
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_decomposition_structure():
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)  # 16 = 2 hosts x 8
+    m, hcount = 8, 2
+    n = 1024 * 16
+    task = CommTask("ar", "all_reduce", n, group)
+    fs = generate_flows(task, "hierarchical", hosts=topo.hosts)
+    assert fs.num_steps == 2 * (m - 1) + 2 * (hcount - 1) + 2
+    leaders = {h[0] for h in topo.hosts}
+    inter_steps = range(m, m + 2 * (hcount - 1))  # after RS + relay-in
+    for f in fs.flows:
+        same_host = topo.host_of(f.src) == topo.host_of(f.dst)
+        if f.step in inter_steps:
+            assert {f.src, f.dst} <= leaders and not same_host
+        else:
+            assert same_host  # every other phase stays on NVLink
+
+
+def test_hierarchical_wire_bytes_vs_flat_ring():
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)
+    p, m, hcount = 16, 8, 2
+    n = 1024 * 16
+    task = CommTask("ar", "all_reduce", n, group)
+    fs = generate_flows(task, "hierarchical", hosts=topo.hosts)
+    # closed-form byte accounting: 2 intra ring passes + leader relay both
+    # ways + leader ring all-reduce
+    expected = 2 * hcount * (m - 1) * n + 2 * hcount * (m - 1) * (n // m) \
+        + 2 * (hcount - 1) * n
+    assert sum(f.size_bytes for f in fs.flows) == expected
+    # NIC-tier (cross-host) bytes: hierarchical crosses only via leaders,
+    # strictly less than the flat ring's crossings
+    def crossing(flows):
+        return sum(f.size_bytes for f in flows
+                   if topo.host_of(f.src) != topo.host_of(f.dst))
+    ring_fs = generate_flows(task, "ring")
+    assert crossing(fs.flows) == 2 * (hcount - 1) * n
+    assert crossing(fs.flows) < crossing(ring_fs.flows)
+
+
+def test_hierarchical_closed_form_registered():
+    cp = CostParams(alpha=1e-6, link_bw=150e9, inter_bw=25e9, gpus_per_host=8)
+    c = algo_cost("all_reduce", "hierarchical", 2 ** 24, 16, cp)
+    assert c > 0
+    # large payload: hierarchical beats flat ring priced at the NIC tier
+    ring = algo_cost("all_reduce", "ring", 2 ** 24, 16,
+                     CostParams(alpha=1e-6, link_bw=25e9))
+    assert c < ring
+    with pytest.raises(KeyError):
+        algo_cost("all_reduce", "hierarchical", 2 ** 24, 16, CostParams())
+
+
+def test_flowsim_vs_alphabeta_crossover_on_dgx():
+    """Selection must flip latency-optimal -> hierarchical as payload grows,
+    under BOTH models, near where the closed form predicts (satellite)."""
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)
+    ab, fsim = AlphaBeta.from_topology(topo), FlowSim(topo)
+    assert ab.params.gpus_per_host == 8
+    assert ab.params.inter_bw == pytest.approx(25e9)
+
+    def pick(model, size):
+        return select_for_task(
+            CommTask("t", "all_reduce", size, group), model).algorithm
+
+    def flip_size(model):
+        lo, hi = 2 ** 10, 2 ** 30
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if pick(model, mid) == "hierarchical":
+                hi = mid
+            else:
+                lo = mid + 1
+        return lo
+
+    for model in (ab, fsim):
+        assert pick(model, 2 ** 12) != "hierarchical"  # latency regime
+        assert pick(model, 2 ** 26) == "hierarchical"  # bandwidth regime
+    ab_flip, fs_flip = flip_size(ab), flip_size(fsim)
+    assert ab_flip / 8 <= fs_flip <= ab_flip * 8
+
+
+def test_flowsim_memoizes_selection_key():
+    topo = dgx_cluster(2)
+    fsim = FlowSim(topo)
+    g = tuple(topo.accelerators)
+    c1 = fsim.cost(CommTask("a", "all_reduce", 2 ** 20, g), "ring")
+    c2 = fsim.cost(CommTask("b", "all_reduce", 2 ** 20, g), "ring")
+    assert c1 == c2
+    assert len(fsim._cost_memo) == 1  # task_id is not part of the key
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+
+def test_packed_placement_keeps_tp_groups_intra_host():
+    topo = dgx_cluster(2)
+    pl = place_mesh(DP2_TP8, topo, "packed")
+    assert pl.model_groups() == [tuple(range(8)), tuple(range(8, 16))]
+    for g in pl.model_groups():
+        assert len({topo.host_of(d) for d in g}) == 1
+    # DP pairs necessarily cross hosts
+    for g in pl.data_groups():
+        assert len({topo.host_of(d) for d in g}) == 2
+
+
+def test_strided_placement_scatters_tp_groups():
+    topo = dgx_cluster(2)
+    pl = place_mesh(DP2_TP8, topo, "strided")
+    assert sorted(pl.devices) == list(topo.accelerators)
+    for g in pl.model_groups():
+        assert len({topo.host_of(d) for d in g}) == 2  # the anti-pattern
+
+
+def test_place_demand_resolves_axis_tagged_groups():
+    topo = dgx_cluster(2)
+    pl = place_mesh(DP2_TP8, topo, "packed")
+    dem = build_demand(get_config("granite-3-8b"), SHAPE, DP2_TP8)
+    placed = pl.place_demand(dem)
+    assert len(placed.comm_tasks) == len(dem.comm_tasks)
+    accel = set(topo.accelerators)
+    for t in placed.comm_tasks:
+        assert set(t.group) <= accel
+        if t.axis == "model":
+            assert t.group == tuple(range(8))
+        if t.axis == "data":
+            assert t.group == (0, 8)
+
+
+def test_placement_validation_errors():
+    topo = dgx_cluster(2)
+    with pytest.raises(ValueError):
+        place_mesh(MeshConfig(shape=(64,), axis_names=("data",),
+                              data_axes=("data",), model_axes=()), topo)
+    with pytest.raises(ValueError):
+        place_mesh(DP2_TP8, topo, "diagonal")
+    with pytest.raises(ValueError):
+        Placement(mesh=DP2_TP8, devices=(0,) * 16)  # duplicates
+    with pytest.raises(ValueError):
+        place_mesh(DP2_TP8, topo, "custom", custom=list(range(100, 116)))
+
+
+def test_strided_placement_on_hostless_topology():
+    topo = torus2d(4, 4)
+    pl = place_mesh(DP2_TP8, topo, "strided")
+    assert sorted(pl.devices) == list(topo.accelerators)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end plan_iteration
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["granite-3-8b", "dbrx-132b", "mamba2-130m"])
+@pytest.mark.parametrize("make_topo", [lambda: dgx_cluster(2),
+                                       lambda: fat_tree(2)],
+                         ids=["dgx_cluster", "fat_tree"])
+def test_plan_iteration_end_to_end(arch, make_topo):
+    topo = make_topo()
+    rep = plan_iteration(get_config(arch), SHAPE, DP2_TP8, topo,
+                         policy="priority", hotspot_k=64)
+    dem = build_demand(get_config(arch), SHAPE, DP2_TP8)
+    assert rep.jct >= rep.compute_time - 1e-9
+    assert len(rep.choices) == len(dem.comm_tasks)
+    accel = set(topo.accelerators)
+    for c in rep.choices:
+        assert set(c.group) <= accel
+        assert c.algorithm in c.costs and c.cost_s == c.costs[c.algorithm]
+    assert rep.sim.algo_choices  # scheduler recorded the CCL's answers
+    loads = [b for _, b in rep.link_hotspots]
+    assert loads == sorted(loads, reverse=True) and loads
+    # the hot-spot map covers every communicator replica, not just the
+    # representative one — host 1's devices must carry traffic too
+    hot_devices = {d for (u, v), _ in rep.link_hotspots
+                   for d in (u, v) if isinstance(d, int)}
+    assert hot_devices & set(range(8, 16))
+
+
+def test_hierarchical_wins_for_large_gradient_all_reduce_on_dgx():
+    """Acceptance: on dgx_cluster with >=2 hosts the selected algorithm for
+    large gradient all-reduces is hierarchical, with lower simulated JCT
+    than forcing the flat ring."""
+    topo = dgx_cluster(2)
+    dp = DemandParams(zero1=False)  # gradient sync as all-reduce
+    auto = plan_iteration(get_config("granite-3-8b"), SHAPE, DP16, topo,
+                          policy="serial", dp_params=dp)
+    ring = plan_iteration(get_config("granite-3-8b"), SHAPE, DP16, topo,
+                          policy="serial", dp_params=dp,
+                          force={"all_reduce": "ring"})
+    grads = [c for c in auto.choices if c.primitive == "all_reduce"]
+    assert grads and all(c.algorithm == "hierarchical" for c in grads)
+    assert all(c.algorithm == "ring" for c in ring.choices)
+    assert auto.jct < ring.jct
+    assert auto.comm_time < ring.comm_time
+
+
+def test_alphabeta_rejects_hierarchical_on_uneven_host_partition():
+    """16 ranks strided over 3 hosts split 6/5/5: divisibility by
+    gpus_per_host alone would accept hierarchical, but the physical
+    partition cannot run it — selection must fall back, not crash later."""
+    topo = dgx_cluster(3)
+    rep = plan_iteration(get_config("qwen2-0.5b"), SHAPE, DP16, topo,
+                         placement="strided", cost_model="alphabeta",
+                         dp_params=DemandParams(zero1=False))
+    algos = rep.algorithms_by_primitive()["all_reduce"]
+    assert "hierarchical" not in algos and algos
+
+
+def test_plan_iteration_selection_stays_fast():
+    """Selection over a 40-layer demand must stay well under a second; the
+    bound is loose for slow CI boxes but catches a lost memoization."""
+    cfg = get_config("granite-3-8b")
+    assert cfg.num_layers == 40
+    t0 = time.perf_counter()
+    plan_iteration(cfg, SHAPE, DP16, dgx_cluster(2), policy="priority",
+                   dp_params=DemandParams(zero1=False))
+    assert time.perf_counter() - t0 < 5.0
+
+
+def test_packed_beats_strided_placement_for_tp():
+    """Placement matters (the codesign claim): TP all-reduces priced on the
+    real topology are cheaper when the TP group stays on NVLink."""
+    topo = dgx_cluster(2)
+    cfg = get_config("granite-3-8b")
+    packed = plan_iteration(cfg, SHAPE, DP2_TP8, topo, policy="serial",
+                            placement="packed")
+    strided = plan_iteration(cfg, SHAPE, DP2_TP8, topo, policy="serial",
+                             placement="strided")
+    assert packed.comm_time < strided.comm_time
+    assert packed.jct <= strided.jct + 1e-9
