@@ -9,13 +9,18 @@ cost/simulation models (EXPERIMENTS.md §Paper-claims records the comparison).
 from __future__ import annotations
 
 import math
+import os
+import sys
 from typing import Dict, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.ccl.algorithms import generate_flows
 from repro.ccl.cost import CostParams, algo_cost
-from repro.ccl.select import select_algorithm
+from repro.ccl.select import (AlphaBeta, FlowSim, select_algorithm,
+                              select_for_task)
 from repro.ccl.synth import Sketch, synthesize
-from repro.codesign import plan_iteration
+from repro.codesign import JobSpec, plan_cluster, plan_iteration
 from repro.configs import get_config
 from repro.core.demand import CommTask
 from repro.core.demand_builder import (DemandParams, build_demand,
@@ -358,6 +363,69 @@ def bench_codesign_placement() -> Tuple[float, Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Sec. IV-A Horizontal: the multi-job cluster planner (CASSINI on real
+# CodesignReports, not toy pulse trains)
+# ---------------------------------------------------------------------------
+
+
+def _contended_cluster():
+    """Two DP-4 tenants, each straddling both racks of a slow fat-tree, so
+    their gradient bursts collide on the tor<->agg uplinks."""
+    topo = fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=2,
+                    nic_bw=2e9, agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    mesh = MeshConfig(shape=(4,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    cfg = get_config("qwen2-0.5b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    dpp = DemandParams(zero1=False)
+    jobs = [JobSpec("jobA", cfg, shape, mesh,
+                    devices=topo.hosts[0] + topo.hosts[2], dp_params=dpp),
+            JobSpec("jobB", cfg, shape, mesh,
+                    devices=topo.hosts[1] + topo.hosts[3], dp_params=dpp)]
+    return jobs, topo
+
+
+def bench_cluster_planner() -> Tuple[float, Dict]:
+    """plan_cluster end-to-end: per-job vertical plans -> shared-link
+    detection -> CASSINI phase staggering.  Derived: worst-case JCT
+    recovery of staggered vs zero-phase naive."""
+    jobs, topo = _contended_cluster()
+    rep = plan_cluster(jobs, topo, grid=6)
+    return rep.stagger_speedup, {
+        "contended_links": len(rep.contended),
+        "naive_worst_stretch": round(rep.naive_worst_stretch, 4),
+        "staggered_worst_stretch": round(rep.staggered_worst_stretch, 4),
+        "phases_s": {n: round(p, 4) for n, p in rep.phases.items()},
+        "solo_jct_s": {n: round(v, 3) for n, v in rep.solo_jct.items()},
+        "paper": "CASSINI: stagger bursts on shared links to recover JCT"}
+
+
+# ---------------------------------------------------------------------------
+# Sec. IV-B Host-Net: ATP as a first-class selection candidate
+# ---------------------------------------------------------------------------
+
+
+def bench_atp_candidate() -> Tuple[float, Dict]:
+    """In-network aggregation competing in selection on a switched
+    fat-tree: derived = atp's speedup over the best host-level algorithm
+    for a latency-regime gradient chunk; the switch-memory fallback must
+    push selection back to a host algorithm."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    task = CommTask("grad", "all_reduce", 2 ** 20,
+                    tuple(topo.accelerators))
+    sel = select_for_task(task, FlowSim(topo))
+    host_best = min(c for a, c in sel.costs.items() if a != "atp")
+    capped = select_for_task(task, FlowSim(topo, switch_capacity=4))
+    return host_best / sel.costs["atp"], {
+        "selected": sel.algorithm,
+        "atp_us": round(sel.costs["atp"] * 1e6, 1),
+        "host_best_us": round(host_best * 1e6, 1),
+        "capped_selected": capped.algorithm,
+        "paper": "ATP speeds aggregation; degrades to host agg when "
+                 "switch memory is exhausted"}
+
+
+# ---------------------------------------------------------------------------
 # Motivation: exposed communication fraction (up to 60% at Meta)
 # ---------------------------------------------------------------------------
 
@@ -388,5 +456,91 @@ ALL_BENCHMARKS = {
     "atp_aggregation": bench_atp_aggregation,
     "codesign_hierarchical": bench_codesign_hierarchical,
     "codesign_placement": bench_codesign_placement,
+    "cluster_planner": bench_cluster_planner,
+    "atp_candidate": bench_atp_candidate,
     "exposed_comm_fraction": bench_exposed_comm_fraction,
 }
+
+
+# ---------------------------------------------------------------------------
+# --smoke: tiny-shape assertions of the key orderings, for CI
+# ---------------------------------------------------------------------------
+
+
+def run_smoke() -> None:
+    """Assert the headline claim *orderings* on tiny inputs — fast enough
+    for a CI step, so paper-claim regressions fail PRs, not just the
+    nightly benchmark run."""
+    checks = []
+
+    def check(name, ok, detail=""):
+        checks.append((name, bool(ok), detail))
+        status = "ok" if ok else "FAIL"
+        print(f"  [{status}] {name}{' — ' + detail if detail else ''}")
+
+    # 1. Intra-Inter: hierarchical beats flat ring on dgx, both models
+    topo = dgx_cluster(2)
+    task = CommTask("g", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    for model in (AlphaBeta.from_topology(topo), FlowSim(topo)):
+        sel = select_for_task(task, model)
+        check(f"hierarchical wins large grad AR ({type(model).__name__})",
+              sel.algorithm == "hierarchical"
+              and sel.costs["hierarchical"] < sel.costs["ring"],
+              f"ring/hier = {sel.costs['ring'] / sel.costs['hierarchical']:.2f}x")
+
+    # 2. Host-Net: atp wins on a switched fat-tree, capacity degrades it
+    ft = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    gtask = CommTask("g", "all_reduce", 2 ** 20, tuple(ft.accelerators))
+    for model in (AlphaBeta.from_topology(ft), FlowSim(ft)):
+        sel = select_for_task(gtask, model)
+        check(f"atp wins 1MiB grad chunk ({type(model).__name__})",
+              sel.algorithm == "atp")
+    capped = select_for_task(gtask, FlowSim(ft, switch_capacity=4))
+    check("switch-memory fallback demotes atp", capped.algorithm != "atp",
+          f"-> {capped.algorithm}")
+
+    # 3. Placement: packed beats strided for TP on dgx
+    mesh = MeshConfig(shape=(2, 8), axis_names=("data", "model"))
+    cfg = get_config("qwen2-0.5b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    packed = plan_iteration(cfg, shape, mesh, topo, policy="serial")
+    strided = plan_iteration(cfg, shape, mesh, topo, policy="serial",
+                             placement="strided")
+    check("packed placement beats strided",
+          packed.comm_time < strided.comm_time,
+          f"{strided.comm_time / packed.comm_time:.2f}x")
+
+    # 4. Horizontal: plan_cluster staggering recovers worst-case JCT
+    jobs, ctopo = _contended_cluster()
+    rep = plan_cluster(jobs, ctopo, grid=6)
+    check("two tenants contend on shared uplinks", len(rep.contended) >= 1,
+          f"{len(rep.contended)} links")
+    check("staggered worst JCT beats naive",
+          rep.staggered_worst_stretch < rep.naive_worst_stretch,
+          f"{rep.naive_worst_stretch:.4f} -> "
+          f"{rep.staggered_worst_stretch:.4f}")
+
+    failed = [c for c in checks if not c[1]]
+    print(f"smoke: {len(checks) - len(failed)}/{len(checks)} orderings hold")
+    if failed:
+        raise SystemExit(f"paper-claim smoke FAILED: "
+                         f"{[name for name, _, _ in failed]}")
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert key claim orderings on tiny shapes (CI)")
+    args = ap.parse_args()
+    if args.smoke:
+        run_smoke()
+        return
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.run import main as run_all
+    run_all()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,6 +12,7 @@ import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 from benchmarks.paper_claims import ALL_BENCHMARKS  # noqa: E402
 

@@ -335,6 +335,38 @@ def hierarchical_all_reduce(task: CommTask,
     return fs
 
 
+def atp_all_reduce(task: CommTask, ps: int = None) -> FlowSet:
+    """In-network aggregation All-Reduce (paper Sec. IV-B "Host-Net", ATP
+    [15] / SwitchML-style): every worker pushes its full gradient toward an
+    aggregation point and receives the sum back — two steps total.
+
+    The flow schedule is a parameter-server pattern (workers -> ``ps``,
+    ``ps`` -> workers; ``ps`` defaults to the group leader); the in-network
+    part happens at simulation time: pricing it with
+    ``aggregate_at=<programmable switches>`` merges the upstream flows at
+    the first shared switch and multicasts the downstream ones, so each
+    fabric link carries the payload once.  Without aggregation-capable
+    switches this degrades to plain host PS aggregation — the multi-tenant
+    switch-memory fallback."""
+    group = task.group
+    p = len(group)
+    fs = FlowSet(task_id=task.task_id, algorithm="atp")
+    if p == 1:
+        return fs
+    if ps is None:
+        ps = group[0]
+    for w in group:
+        if w != ps:
+            fs.flows.append(Flow(w, ps, task.size_bytes, task.task_id, 0,
+                                 task.job_id))
+    for w in group:
+        if w != ps:
+            fs.flows.append(Flow(ps, w, task.size_bytes, task.task_id, 1,
+                                 task.job_id))
+    fs.num_steps = 2
+    return fs
+
+
 ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
     "all_reduce": {
         "ring": ring_all_reduce,
@@ -343,6 +375,7 @@ ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
         "tree": tree_all_reduce,
         "torus2d": torus2d_all_reduce,
         "hierarchical": hierarchical_all_reduce,
+        "atp": atp_all_reduce,
     },
     "all_gather": {"ring": ring_all_gather},
     "reduce_scatter": {"ring": ring_reduce_scatter},

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 
 @dataclass(frozen=True)
@@ -24,6 +25,11 @@ class CostParams:
     # all-reduce closed form.
     inter_bw: float = 0.0        # bytes/s across hosts (0 = link_bw)
     gpus_per_host: int = 0       # accelerators per host (0 = no hierarchy)
+    # in-network aggregation (ATP): max group size a programmable switch can
+    # aggregate concurrently; None = unlimited, 0 = switch memory exhausted
+    # (same convention as sched.atp.aggregation_switches).  Groups beyond it
+    # degrade to host PS aggregation (the multi-tenant fallback).
+    atp_capacity: Optional[int] = None
 
 
 def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
@@ -65,6 +71,22 @@ def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
             inter = 2 * (hcount - 1) * a \
                 + 2 * (hcount - 1) / hcount * n / b_inter       # leader ring AR
             return intra + relay + inter
+        if algorithm == "atp":
+            # In-network aggregation (ATP): workers push the full gradient
+            # up, programmable switches merge same-task flows, the sum
+            # multicasts back — 2 latency steps, each fabric link carrying
+            # ~n once.  Needs a switched inter-host tier to aggregate on.
+            b_inter = cp.inter_bw
+            if not b_inter:
+                raise KeyError(
+                    "atp all-reduce needs a switched inter-host tier "
+                    "(CostParams.inter_bw); flat fabrics have no "
+                    "aggregation point")
+            if cp.atp_capacity is not None and p > cp.atp_capacity:
+                # switch memory exhausted -> host PS aggregation: all p
+                # unmerged flows converge on the PS's NIC, both directions
+                return 2 * a + 2 * p * n / b_inter
+            return 2 * a + 2 * n / b_inter
     if primitive in ("all_gather", "reduce_scatter"):
         # n = TOTAL payload (the gathered size / the pre-reduce size)
         if algorithm == "ring":

@@ -19,6 +19,11 @@ gap):
 ``select_algorithm`` keeps the seed's signature (AlphaBeta under the hood);
 ``select_for_task`` is the topology-aware entry point the codesign driver
 uses.
+
+The "Host-Net" arrow (paper Sec. IV-B) runs through here too: the ``atp``
+in-network-aggregation all-reduce competes like any other candidate on
+switched topologies, with ``sched.atp.aggregation_switches`` supplying the
+aggregation capability and the multi-tenant switch-memory fallback.
 """
 from __future__ import annotations
 
@@ -32,6 +37,7 @@ from repro.ccl.cost import CostParams, algo_cost
 from repro.core.demand import CommTask, FlowSet
 from repro.net.simulate import simulate_flowset
 from repro.net.topology import Topology
+from repro.sched.atp import aggregation_switches
 
 
 # ---------------------------------------------------------------------------
@@ -115,17 +121,29 @@ class AlphaBeta:
             m = self.params.gpus_per_host
             p = len(task.group)
             return m > 1 and p > m and p % m == 0
+        if algorithm == "atp":
+            # in-network aggregation needs programmable switches on the
+            # fabric; with only closed-form params, a switched inter-host
+            # tier (inter_bw) is the eligibility proxy
+            if self.topo is not None:
+                return bool(self.topo.switch_nodes())
+            return self.params.inter_bw > 0
         return True
 
     def cost(self, task: CommTask, algorithm: str) -> float:
         cp = self.params
         p = len(task.group)
+        if algorithm == "atp" and not cp.inter_bw:
+            # switched but non-hierarchical fabric (e.g. one NIC per host):
+            # the aggregation tier runs at the bottleneck link bandwidth
+            cp = dataclasses.replace(cp, inter_bw=cp.link_bw)
         if algorithm == "hierarchical" and self.topo is not None:
             # the placed group's actual per-host size, not the nominal one
             m = len(self.topo.host_groups(task.group)[0])
             if m != cp.gpus_per_host:
                 cp = dataclasses.replace(cp, gpus_per_host=m)
-        elif (algorithm != "hierarchical" and cp.gpus_per_host > 1
+        elif (algorithm not in ("hierarchical", "atp")
+                and cp.gpus_per_host > 1
                 and p > cp.gpus_per_host and cp.inter_bw):
             share = _NIC_SHARING.get(algorithm, 1.0) or cp.gpus_per_host
             cp = dataclasses.replace(cp, link_bw=cp.inter_bw / share)
@@ -172,10 +190,17 @@ class FlowSim:
     Both the generated flowsets and the simulated costs are memoized on
     ``(primitive, algorithm, size_bytes, group)``: a 40-layer demand repeats
     a handful of unique (size, group) keys, so end-to-end selection stays
-    sub-second."""
+    sub-second.
 
-    def __init__(self, topo: Topology):
+    ``switch_capacity`` is the per-switch in-network aggregation budget
+    (ATP's multi-tenant constraint, forwarded to
+    ``sched.atp.aggregation_switches``): groups larger than it lose the
+    aggregation discount and the ``atp`` candidate is priced as degraded
+    host PS aggregation."""
+
+    def __init__(self, topo: Topology, switch_capacity: Optional[int] = None):
         self.topo = topo
+        self.switch_capacity = switch_capacity
         self._cost_memo: Dict[Tuple, float] = {}
         self._flow_memo: Dict[Tuple, FlowSet] = {}
 
@@ -185,6 +210,10 @@ class FlowSim:
     def supports(self, task: CommTask, algorithm: str) -> bool:
         if algorithm == "hierarchical":
             return _hierarchical_partition_ok(self.topo, task.group)
+        if algorithm == "atp":
+            # needs programmable switches below a host structure (fat-tree /
+            # DGX NIC tier); pure ICI fabrics have no aggregation point
+            return bool(self.topo.hosts) and bool(self.topo.switch_nodes())
         return True
 
     def flowset(self, task: CommTask, algorithm: str) -> FlowSet:
@@ -197,8 +226,12 @@ class FlowSim:
     def cost(self, task: CommTask, algorithm: str) -> float:
         key = self._key(task, algorithm)
         if key not in self._cost_memo:
+            agg = None
+            if algorithm == "atp":
+                agg = aggregation_switches(self.topo, task.group,
+                                           self.switch_capacity)
             self._cost_memo[key] = simulate_flowset(
-                self.topo, self.flowset(task, algorithm))
+                self.topo, self.flowset(task, algorithm), aggregate_at=agg)
         return self._cost_memo[key]
 
 

@@ -31,12 +31,21 @@ together:
     ``CodesignReport`` with JCT, exposed communication, per-task algorithm
     choices and per-link hot spots.
 
-Not yet integrated (see ROADMAP.md Open items): the "Horizontal" flow
-scheduler (multi-job CASSINI staggering happens in ``sched.flows`` but
-``plan_iteration`` plans a single job) and "Host-Net" in-network
-aggregation (``sched.atp`` models it but the driver does not offer it as a
-selection candidate).
+``cluster``
+    The "Horizontal" arrow: ``plan_cluster(jobs, topo)`` runs every
+    tenant's ``plan_iteration``, asks the network layer which links carry
+    >= 2 jobs' traffic, compresses each job into a ``sched.flows``
+    ``JobProfile`` and CASSINI-staggers their iteration phases, returning a
+    ``ClusterReport`` (naive vs. staggered per-job JCT, contended links,
+    chosen phases).
+
+"Host-Net" in-network aggregation is a first-class selection candidate:
+``sched.atp`` exposes the aggregation capability (with the multi-tenant
+switch-memory fallback) and both cost models price the ``atp`` all-reduce
+against ``hierarchical`` and friends on switched topologies.
 """
 from repro.codesign.placement import Placement, place_mesh  # noqa: F401
 from repro.codesign.driver import (CodesignReport, TaskChoice,  # noqa: F401
                                    plan_iteration)
+from repro.codesign.cluster import (ClusterReport, JobPlan,  # noqa: F401
+                                    JobSpec, plan_cluster)

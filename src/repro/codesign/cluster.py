@@ -1,0 +1,230 @@
+"""Horizontal multi-job cluster planner (paper Sec. IV-A, CASSINI [16]).
+
+``plan_iteration`` plans one job on an empty network; real clusters run many
+jobs whose communication bursts meet on shared links (the Fig. 5(b) case at
+(2)).  ``plan_cluster`` closes the loop between the vertical co-design
+engine and the horizontal flow scheduler:
+
+  1. carve the topology's accelerators into per-job partitions (explicit
+     ``JobSpec.devices`` or first-fit consecutive blocks);
+  2. run every job through ``plan_iteration`` — placement, per-task
+     algorithm selection priced on the shared topology, JCT — and keep its
+     full per-link byte map;
+  3. ask the network layer which links carry traffic from >= 2 jobs
+     (``net.simulate.shared_link_load``);
+  4. compress each job into a :class:`sched.flows.JobProfile` (compute
+     phase, comm burst, per-contended-link demand fraction) and search
+     phase shifts with ``sched.flows.stagger_jobs`` to minimize the
+     worst-case JCT stretch.
+
+The result is a :class:`ClusterReport`: per-job naive (zero-phase) vs.
+staggered JCT, the contended-link map, and the chosen phases — the first
+genuinely multi-tenant answer the engine can hand back up the stack.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.ccl.select import CostModel
+from repro.core.demand_builder import DemandParams
+from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
+from repro.net.simulate import shared_link_load
+from repro.net.topology import Topology
+from repro.sched.flows import JobProfile, stagger_jobs, worst_stretch
+from repro.sched.tasks import Policy
+
+from repro.codesign.driver import CodesignReport, plan_iteration
+from repro.codesign.placement import place_mesh
+
+
+@dataclass(frozen=True)
+class JobSpec:
+    """One tenant job: what to train, how to shard it, and (optionally)
+    which physical devices it owns."""
+
+    name: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig
+    devices: Optional[Tuple[int, ...]] = None  # None = first-fit block
+    policy: Policy = "priority"
+    dp_params: DemandParams = DemandParams()
+    force: Optional[Dict[str, str]] = None
+
+
+@dataclass
+class JobPlan:
+    """One job's single-tenant plan plus its horizontal-layer summary."""
+
+    spec: JobSpec
+    devices: Tuple[int, ...]
+    report: CodesignReport
+    profile: JobProfile
+    link_bytes: Dict[Tuple, float]
+
+
+@dataclass
+class ClusterReport:
+    """What the horizontal planner hands back up the stack."""
+
+    jobs: List[JobPlan]
+    contended: Dict[Tuple, Dict[str, float]]  # link -> {job: bytes}
+    phases: Dict[str, float]
+    naive_jct: Dict[str, float]
+    staggered_jct: Dict[str, float]
+    cost_model: str = "flowsim"
+    link_demands: Dict[str, Dict[Tuple, float]] = field(default_factory=dict)
+
+    @property
+    def solo_jct(self) -> Dict[str, float]:
+        """Each job's JCT alone on the cluster (its iteration period)."""
+        return {jp.spec.name: jp.profile.period for jp in self.jobs}
+
+    def _stretch(self, jct: Dict[str, float]) -> float:
+        return worst_stretch(jct, [jp.profile for jp in self.jobs])
+
+    @property
+    def naive_worst_stretch(self) -> float:
+        return self._stretch(self.naive_jct)
+
+    @property
+    def staggered_worst_stretch(self) -> float:
+        return self._stretch(self.staggered_jct)
+
+    @property
+    def stagger_speedup(self) -> float:
+        """Worst-case JCT improvement of staggering over zero phases."""
+        return self.naive_worst_stretch / self.staggered_worst_stretch
+
+
+def _carve_devices(jobs: Sequence[JobSpec], topo: Topology
+                   ) -> List[Tuple[int, ...]]:
+    """Assign each job its accelerators: explicit ``devices`` first, then
+    first-fit consecutive blocks from what remains."""
+    taken: Dict[int, str] = {}
+    out: List[Optional[Tuple[int, ...]]] = [None] * len(jobs)
+    accel = list(topo.accelerators)
+    accel_set = set(accel)
+    for i, spec in enumerate(jobs):
+        if spec.devices is None:
+            continue
+        devs = tuple(spec.devices)
+        if len(devs) != spec.mesh.num_devices:
+            raise ValueError(
+                f"job {spec.name!r}: {len(devs)} devices for mesh "
+                f"{spec.mesh.shape} ({spec.mesh.num_devices} needed)")
+        bad = set(devs) - accel_set
+        if bad:
+            raise ValueError(f"job {spec.name!r}: non-accelerator devices "
+                             f"{sorted(bad)} on {topo.name}")
+        for d in devs:
+            if d in taken:
+                raise ValueError(
+                    f"device {d} claimed by both {taken[d]!r} and "
+                    f"{spec.name!r}")
+            taken[d] = spec.name
+        out[i] = devs
+    free = [d for d in accel if d not in taken]
+    for i, spec in enumerate(jobs):
+        if out[i] is not None:
+            continue
+        n = spec.mesh.num_devices
+        if n > len(free):
+            raise ValueError(
+                f"job {spec.name!r} needs {n} devices but only {len(free)} "
+                f"of {topo.name}'s {len(accel)} remain")
+        out[i] = tuple(free[:n])
+        for d in out[i]:
+            taken[d] = spec.name
+        free = free[n:]
+    return out  # type: ignore[return-value]
+
+
+def _job_profile(name: str, report: CodesignReport) -> JobProfile:
+    """Compress a CodesignReport into the flow scheduler's pulse model:
+    the comm burst is the network-busy time, the compute phase is the rest
+    of the iteration, so the period equals the job's solo JCT."""
+    comm_s = min(report.comm_time, report.jct)
+    compute_s = max(report.jct - comm_s, 1e-9)
+    return JobProfile(name, compute_s, comm_s)
+
+
+def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
+                 cost_model: Union[str, CostModel] = "flowsim",
+                 grid: int = 8, horizon_iters: int = 12,
+                 dt: Optional[float] = None,
+                 switch_capacity: Optional[int] = None,
+                 max_contended_links: int = 8) -> ClusterReport:
+    """Plan N jobs sharing one physical cluster and stagger their phases.
+
+    ``dt`` is the flow scheduler's time step (None = 1/400 of the shortest
+    job period); ``grid`` the CASSINI phase-search resolution;
+    ``max_contended_links`` bounds the per-job demand maps to the hottest
+    shared links so the phase search stays cheap.  ``switch_capacity``
+    (ATP) is forwarded to per-job selection."""
+    if not jobs:
+        raise ValueError("plan_cluster needs at least one JobSpec")
+    names = [s.name for s in jobs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate job names: {names}")
+
+    device_blocks = _carve_devices(jobs, topo)
+    n_links = topo.graph.number_of_edges()
+    plans: List[JobPlan] = []
+    for spec, devs in zip(jobs, device_blocks):
+        placement = place_mesh(spec.mesh, topo, "custom", custom=devs)
+        report = plan_iteration(
+            spec.cfg, spec.shape, spec.mesh, topo, policy=spec.policy,
+            placement=placement, cost_model=cost_model,
+            dp_params=spec.dp_params, force=spec.force, hotspot_k=n_links,
+            switch_capacity=switch_capacity)
+        plans.append(JobPlan(
+            spec=spec, devices=devs, report=report,
+            profile=_job_profile(spec.name, report),
+            link_bytes=dict(report.link_hotspots)))
+    model_name = plans[0].report.cost_model  # as the driver resolved it
+
+    # --- horizontal layer: which links do >= 2 jobs press on? -------------
+    contended = shared_link_load(
+        {jp.spec.name: jp.link_bytes for jp in plans})
+    if len(contended) > max_contended_links:
+        hottest = sorted(contended,
+                         key=lambda l: -sum(contended[l].values()))
+        contended = {l: contended[l] for l in hottest[:max_contended_links]}
+
+    profiles = [jp.profile for jp in plans]
+    link_demands = []
+    for jp in plans:
+        comm_s = max(jp.profile.comm_s, 1e-12)
+        dem = {}
+        for link in contended:
+            nbytes = jp.link_bytes.get(link, 0.0)
+            if nbytes <= 0:
+                continue
+            bw = topo.link_bw(*link)
+            dem[link] = min(1.0, nbytes / (bw * comm_s))
+        link_demands.append(dem)
+
+    if not contended:
+        # nothing shared: every job runs at its solo JCT, staggering no-op
+        solo = {jp.spec.name: jp.profile.period for jp in plans}
+        return ClusterReport(
+            jobs=plans, contended={},
+            phases={n: 0.0 for n in names},
+            naive_jct=dict(solo), staggered_jct=dict(solo),
+            cost_model=model_name,
+            link_demands={n: {} for n in names})
+
+    if dt is None:
+        dt = min(p.period for p in profiles) / 400.0
+    best_phases, naive, staggered = stagger_jobs(
+        profiles, grid=grid, link_demands=link_demands,
+        horizon_iters=horizon_iters, dt=dt)
+    return ClusterReport(
+        jobs=plans, contended=contended,
+        phases=dict(zip(names, best_phases)),
+        naive_jct=naive, staggered_jct=staggered,
+        cost_model=model_name,
+        link_demands={jp.spec.name: d
+                      for jp, d in zip(plans, link_demands)})

@@ -26,6 +26,7 @@ from repro.core.demand_builder import DemandParams, build_demand
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import link_utilization
 from repro.net.topology import Topology
+from repro.sched.atp import aggregation_switches
 from repro.sched.tasks import Policy, SimResult, simulate_iteration
 
 from repro.codesign.placement import Placement, place_mesh
@@ -72,14 +73,37 @@ class CodesignReport:
         return out
 
 
-def _resolve_cost_model(cost_model: Union[str, CostModel],
-                        topo: Topology) -> Tuple[CostModel, str]:
+def _model_capacity(model: CostModel) -> Optional[int]:
+    """The in-network aggregation budget a cost model prices ``atp`` with
+    (None = unlimited): FlowSim carries ``switch_capacity``, AlphaBeta
+    ``params.atp_capacity``."""
+    cap = getattr(model, "switch_capacity", None)
+    if cap is None:
+        cap = getattr(getattr(model, "params", None), "atp_capacity", None)
+    return cap
+
+
+def _resolve_cost_model(cost_model: Union[str, CostModel], topo: Topology,
+                        switch_capacity: Optional[int] = None
+                        ) -> Tuple[CostModel, str]:
     if not isinstance(cost_model, str):
+        if switch_capacity is not None and \
+                _model_capacity(cost_model) != switch_capacity:
+            raise ValueError(
+                "switch_capacity applies to the named cost models "
+                "('flowsim' | 'alphabeta'); a CostModel instance must "
+                "carry its own aggregation budget (e.g. "
+                "FlowSim(topo, switch_capacity=...) or "
+                "CostParams(atp_capacity=...))")
         return cost_model, type(cost_model).__name__.lower()
     if cost_model == "flowsim":
-        return FlowSim(topo), "flowsim"
+        return FlowSim(topo, switch_capacity=switch_capacity), "flowsim"
     if cost_model == "alphabeta":
-        return AlphaBeta.from_topology(topo), "alphabeta"
+        ab = AlphaBeta.from_topology(topo)
+        if switch_capacity is not None:
+            ab = dataclasses.replace(ab, params=dataclasses.replace(
+                ab.params, atp_capacity=switch_capacity))
+        return ab, "alphabeta"
     raise ValueError(f"unknown cost model {cost_model!r} "
                      f"(flowsim | alphabeta | a CostModel instance)")
 
@@ -91,7 +115,8 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                    dp_params: DemandParams = DemandParams(),
                    allow: Optional[Tuple[str, ...]] = None,
                    force: Optional[Dict[str, str]] = None,
-                   hotspot_k: int = 8) -> CodesignReport:
+                   hotspot_k: int = 8,
+                   switch_capacity: Optional[int] = None) -> CodesignReport:
     """Run one training iteration through the full co-design pipeline.
 
     ``placement``: a strategy name (packed/strided) or a pre-built
@@ -99,10 +124,17 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
     "alphabeta" (closed forms with params derived from ``topo``), or any
     CostModel.  ``force``: primitive -> algorithm overrides (e.g.
     ``{"all_reduce": "ring"}`` to measure what topology-blind flat-ring
-    selection costs).  ``allow``: whitelist forwarded to selection."""
+    selection costs).  ``allow``: whitelist forwarded to selection.
+    ``switch_capacity``: per-switch in-network aggregation budget for the
+    ``atp`` candidate (None = unlimited; see ``sched.atp``)."""
     pl = placement if isinstance(placement, Placement) else \
         place_mesh(mesh, topo, strategy=placement)
-    model, model_name = _resolve_cost_model(cost_model, topo)
+    model, model_name = _resolve_cost_model(cost_model, topo,
+                                            switch_capacity)
+    # the aggregation budget selection actually priced atp with — an
+    # instance cost model carries its own; the hot-spot map must match it
+    agg_capacity = switch_capacity if switch_capacity is not None \
+        else _model_capacity(model)
 
     demand = build_demand(cfg, shape, mesh, dp_params)
     placed = pl.place_demand(demand)
@@ -160,7 +192,9 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                     # than mis-attribute its bytes
                     continue
                 fs_memo[key] = fs
-            for link, nbytes in link_utilization(topo, fs).items():
+            agg = aggregation_switches(topo, group, agg_capacity) \
+                if algo == "atp" else None
+            for link, nbytes in link_utilization(topo, fs, agg).items():
                 util[link] = util.get(link, 0.0) + nbytes
     hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:hotspot_k]
 

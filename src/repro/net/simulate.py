@@ -5,7 +5,10 @@ same step run concurrently and share links; a step's duration is the max
 over links of (bytes on link / link bw) plus one latency hop (synchronous
 bulk model — the same abstraction SCCL/TACCL cost their schedules with).
 Supports in-network aggregation (ATP-style): flows of the same task that
-meet at a programmable switch are merged (summed payload -> single flow).
+meet at a programmable switch are merged (summed payload -> single flow),
+and the symmetric multicast case — flows of the same task fanning out from
+one source (the aggregated result returning to the workers) carry the
+payload once on every shared path prefix.
 """
 from __future__ import annotations
 
@@ -29,14 +32,16 @@ def _route_bytes(topo: Topology, flows: Iterable[Flow],
 
     # ATP-style: flows with identical (task, dst) merge at the first shared
     # aggregation-capable switch on their paths; downstream of the merge
-    # point only one payload continues.
-    by_group: Dict[Tuple, List[Flow]] = defaultdict(list)
+    # point only one payload continues.  The symmetric case — one source
+    # fanning the aggregated result back out (task, src) — is a multicast:
+    # every link on the shared path tree carries the payload once.
+    by_dst: Dict[Tuple, List[Flow]] = defaultdict(list)
     for f in flows:
-        by_group[(f.task_id, f.dst)].append(f)
-    for (task, dst), fl in by_group.items():
+        by_dst[(f.task_id, f.dst)].append(f)
+    remaining: List[Flow] = []  # not merged; multicast candidates
+    for (task, dst), fl in by_dst.items():
         if len(fl) == 1:
-            for link in topo.path_links(fl[0].src, fl[0].dst):
-                link_bytes[link] += fl[0].size_bytes
+            remaining.append(fl[0])
             continue
         seen_downstream: Set[Tuple] = set()
         for f in fl:
@@ -53,6 +58,33 @@ def _route_bytes(topo: Topology, flows: Iterable[Flow],
                 if not merged and (u in aggregate_at or v in aggregate_at):
                     merged = True
         # (approximation: payload sizes equal within a group)
+    by_src: Dict[Tuple, List[Flow]] = defaultdict(list)
+    for f in remaining:
+        by_src[(f.task_id, f.src)].append(f)
+    for (task, src), fl in by_src.items():
+        if len(fl) == 1:
+            f = fl[0]
+            for link in topo.path_links(f.src, f.dst):
+                link_bytes[link] += f.size_bytes
+            continue
+        # multicast fan-out: one shared copy travels as far as the LAST
+        # aggregation-capable switch on each receiver's path (which
+        # replicates it); links beyond that carry per-receiver copies.
+        # Shared links are counted once across the group.
+        seen_shared: Set[Tuple] = set()
+        for f in fl:
+            links = topo.path_links(f.src, f.dst)
+            last_cap = -1
+            for i, (u, v) in enumerate(links):
+                if v in aggregate_at:
+                    last_cap = i
+            for i, link in enumerate(links):
+                if i <= last_cap:
+                    if link not in seen_shared:
+                        link_bytes[link] += f.size_bytes
+                        seen_shared.add(link)
+                else:
+                    link_bytes[link] += f.size_bytes
     return link_bytes
 
 
@@ -98,10 +130,39 @@ def simulate_schedule(topo: Topology, flowsets: Sequence[FlowSet],
     return total
 
 
-def link_utilization(topo: Topology, fs: FlowSet) -> Dict[Tuple, float]:
-    """Aggregate bytes per link across the whole schedule (hot-spot map)."""
+def link_utilization(topo: Topology, fs: FlowSet,
+                     aggregate_at: Optional[Set] = None) -> Dict[Tuple, float]:
+    """Aggregate bytes per link across the whole schedule (hot-spot map).
+
+    ``aggregate_at``: switches that merge/multicast same-task flows
+    (in-network aggregation) — pass for ATP-style schedules so the map
+    reflects the reduced on-wire traffic."""
     out: Dict[Tuple, float] = defaultdict(float)
+    if aggregate_at:
+        by_step: Dict[int, List[Flow]] = defaultdict(list)
+        for f in fs.flows:
+            by_step[f.step].append(f)
+        for step_flows in by_step.values():
+            for link, nbytes in _route_bytes(topo, step_flows,
+                                             aggregate_at).items():
+                out[link] += nbytes
+        return dict(out)
     for f in fs.flows:
         for link in topo.path_links(f.src, f.dst):
             out[link] += f.size_bytes
     return dict(out)
+
+
+def shared_link_load(per_job: Dict[str, Dict[Tuple, float]],
+                     min_jobs: int = 2) -> Dict[Tuple, Dict[str, float]]:
+    """Link-share query for the horizontal planner: given per-job link-byte
+    maps (e.g. each job's ``CodesignReport`` hot-spot map), return the links
+    carrying traffic from at least ``min_jobs`` distinct jobs, as
+    link -> {job: bytes}."""
+    users: Dict[Tuple, Dict[str, float]] = defaultdict(dict)
+    for job, link_bytes in per_job.items():
+        for link, nbytes in link_bytes.items():
+            if nbytes > 0:
+                users[link][job] = nbytes
+    return {link: jobs for link, jobs in users.items()
+            if len(jobs) >= min_jobs}

@@ -9,4 +9,5 @@ three-layer to the five-layer paradigm (Sec. IV-A).
 ``atp``    — "Host-Net" co-design: in-network aggregation modeling (ATP).
 """
 from repro.sched.tasks import SimResult, simulate_iteration  # noqa: F401
-from repro.sched.flows import stagger_jobs, multi_job_jct  # noqa: F401
+from repro.sched.flows import (JobProfile, multi_job_jct,  # noqa: F401
+                               stagger_jobs, worst_stretch)

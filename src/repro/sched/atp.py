@@ -18,6 +18,21 @@ from repro.net.topology import Topology
 from repro.net.simulate import link_utilization, simulate_flowset
 
 
+def aggregation_switches(topo: Topology, group: Sequence[int],
+                         capacity: Optional[int] = None) -> Set:
+    """The switches able to aggregate a group's gradient flows in-network.
+
+    ``capacity``: max concurrent aggregations a switch supports (None =
+    unlimited).  A group larger than the capacity exhausts switch memory
+    and gets the empty set — the multi-tenant degradation to host
+    aggregation that ATP prices in.  This is the "Host-Net" hook the CCL
+    selection layer (``ccl.select.FlowSim``) consults when pricing the
+    ``atp`` all-reduce candidate."""
+    if capacity is not None and len(group) > capacity:
+        return set()
+    return set(topo.switch_nodes())
+
+
 def host_aggregation_flows(task: CommTask, ps_node) -> FlowSet:
     """Baseline: every worker sends its gradient to a parameter-server node
     (host aggregation), PS broadcasts back."""
@@ -41,13 +56,10 @@ def atp_traffic(topo: Topology, task: CommTask, ps_node,
     (None = unlimited); beyond it, flows fall back to host aggregation —
     ATP's multi-tenant degradation."""
     fs = host_aggregation_flows(task, ps_node)
-    switches = set(topo.switch_nodes())
     base_bytes = sum(link_utilization(topo, fs).values())
     base_time = simulate_flowset(topo, fs)
 
-    agg_at = switches
-    if switch_capacity is not None and len(task.group) > switch_capacity:
-        agg_at = set()  # degraded: no in-network help
+    agg_at = aggregation_switches(topo, task.group, switch_capacity)
     agg_time = simulate_flowset(topo, fs, aggregate_at=agg_at)
 
     # aggregated byte count: recount with merge semantics

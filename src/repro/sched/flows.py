@@ -6,20 +6,36 @@ shared link simultaneously, both stretch (the Fig. 5(b) case at (2)).
 CASSINI's observation: shifting jobs' iteration *phases* interleaves the
 bursts ("staggering peak") and recovers most of the loss.
 
-We model each job as a rectangular bandwidth-demand pulse train on a shared
-link and compute the stretch factor of the communication phase under
-max-min sharing, then search over phase shifts to minimize the worst JCT.
+We model each job as a rectangular bandwidth-demand pulse train and compute
+the stretch factor of the communication phase under proportional max-min
+sharing, then search over phase shifts to minimize the worst JCT.
+
+Two granularities:
+
+  * single link — every job presses ``JobProfile.demand_frac`` onto one
+    shared link (the original CASSINI toy model);
+  * a **set of contended links** — each job carries a per-link demand map
+    (``link_demands``) derived from its ``CodesignReport`` hot-spot map by
+    ``codesign.cluster.plan_cluster``; a job's burst progresses at the rate
+    of its most-contended link (the network-layer bottleneck rule).
+
+The time-step ``dt`` and simulation ``horizon_iters`` are part of the
+public API (they default to values for ~10ms-scale iterations; callers with
+much shorter periods should shrink ``dt`` — see ``tests/test_sched.py``'s
+convergence check).
 """
 from __future__ import annotations
 
 import itertools
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+LinkDemands = Sequence[Dict[Hashable, float]]  # per-job {link: demand frac}
 
 
 @dataclass(frozen=True)
 class JobProfile:
-    """One training job as seen by a shared link."""
+    """One training job as seen by the shared network."""
 
     name: str
     compute_s: float        # compute phase duration per iteration
@@ -31,13 +47,24 @@ class JobProfile:
         return self.compute_s + self.comm_s
 
 
-def _simulate_link(jobs: Sequence[JobProfile], phases: Sequence[float],
-                   horizon_iters: int = 20, dt: float = 1e-4
-                   ) -> Dict[str, float]:
-    """Time-stepped max-min sharing of one link.  Each job alternates
-    compute (no demand) and comm (demand_frac) phases; a job's comm phase
-    extends while it hasn't transmitted comm_s * demand_frac worth of
-    link-seconds.  Returns average iteration time ('JCT') per job."""
+def _simulate_links(jobs: Sequence[JobProfile], phases: Sequence[float],
+                    link_demands: Optional[LinkDemands] = None,
+                    horizon_iters: int = 20, dt: float = 1e-4
+                    ) -> Dict[str, float]:
+    """Time-stepped sharing of a set of contended links.
+
+    Each job alternates compute (no demand) and comm phases; during comm it
+    presses its per-link demand fractions onto every link in its map, and
+    its burst progresses at the rate of its most oversubscribed link
+    (proportional sharing: rate = min over links of 1/total_demand, capped
+    at 1).  Returns average iteration time ('JCT') per job."""
+    if len(phases) != len(jobs):
+        raise ValueError(f"{len(phases)} phases for {len(jobs)} jobs")
+    if link_demands is None:
+        link_demands = [{"shared": j.demand_frac} for j in jobs]
+    elif len(link_demands) != len(jobs):
+        raise ValueError(f"{len(link_demands)} link-demand maps for "
+                         f"{len(jobs)} jobs")
     t = 0.0
     state = []
     for j, ph in zip(jobs, phases):
@@ -45,34 +72,35 @@ def _simulate_link(jobs: Sequence[JobProfile], phases: Sequence[float],
             "job": j, "phase": "compute",
             "remaining": j.compute_s + (ph % j.period),
             "iters": 0, "t_done": [],
-            "start": t,
         })
-    total_iters = horizon_iters * len(jobs)
-    done_iters = 0
-    max_t = horizon_iters * max(j.period for j in jobs) * 4
-    while done_iters < total_iters and t < max_t:
-        demands = [s["job"].demand_frac if s["phase"] == "comm" else 0.0
-                   for s in state]
-        total_d = sum(demands)
-        share = [0.0] * len(state)
-        if total_d > 0:
-            scale = min(1.0, 1.0 / total_d)
-            share = [d * scale for d in demands]
-        for s, sh in zip(state, share):
+    # run until EVERY job finishes its horizon (a global iteration budget
+    # would starve a slow tenant sharing with a much faster one and report
+    # inf); the wall-clock cap guards pathological stretch
+    max_t = horizon_iters * max(j.period for j in jobs) * (len(jobs) + 3)
+    while any(s["iters"] < horizon_iters for s in state) and t < max_t:
+        total_d: Dict[Hashable, float] = {}
+        for s, dem in zip(state, link_demands):
+            if s["phase"] == "comm":
+                for link, d in dem.items():
+                    total_d[link] = total_d.get(link, 0.0) + d
+        for s, dem in zip(state, link_demands):
             if s["phase"] == "compute":
                 s["remaining"] -= dt
                 if s["remaining"] <= 0:
                     s["phase"] = "comm"
-                    s["remaining"] = s["job"].comm_s * s["job"].demand_frac
+                    s["remaining"] = s["job"].comm_s
             else:
-                s["remaining"] -= dt * (sh / s["job"].demand_frac
-                                        if s["job"].demand_frac else 1.0)
+                rate = 1.0
+                for link in dem:
+                    td = total_d.get(link, 0.0)
+                    if td > 1.0:
+                        rate = min(rate, 1.0 / td)
+                s["remaining"] -= dt * rate
                 if s["remaining"] <= 0:
                     s["phase"] = "compute"
                     s["remaining"] = s["job"].compute_s
                     s["iters"] += 1
                     s["t_done"].append(t)
-                    done_iters += 1
         t += dt
     out = {}
     for s in state:
@@ -84,29 +112,53 @@ def _simulate_link(jobs: Sequence[JobProfile], phases: Sequence[float],
     return out
 
 
-def multi_job_jct(jobs: Sequence[JobProfile],
-                  phases: Sequence[float]) -> Dict[str, float]:
-    return _simulate_link(jobs, phases)
+def _simulate_link(jobs: Sequence[JobProfile], phases: Sequence[float],
+                   horizon_iters: int = 20, dt: float = 1e-4
+                   ) -> Dict[str, float]:
+    """Single shared link (every job demands ``demand_frac`` of it)."""
+    return _simulate_links(jobs, phases, None, horizon_iters, dt)
 
 
-def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8
-                 ) -> Tuple[Tuple[float, ...], Dict[str, float], Dict[str, float]]:
+def multi_job_jct(jobs: Sequence[JobProfile], phases: Sequence[float],
+                  link_demands: Optional[LinkDemands] = None,
+                  horizon_iters: int = 20, dt: float = 1e-4
+                  ) -> Dict[str, float]:
+    """Average iteration time per job at the given phase offsets."""
+    return _simulate_links(jobs, phases, link_demands, horizon_iters, dt)
+
+
+def worst_stretch(jct: Dict[str, float],
+                  jobs: Sequence[JobProfile]) -> float:
+    """Worst relative slowdown vs. running alone (>= 1 up to dt noise)."""
+    return max(jct[j.name] / j.period for j in jobs)
+
+
+def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8,
+                 link_demands: Optional[LinkDemands] = None,
+                 horizon_iters: int = 20, dt: float = 1e-4
+                 ) -> Tuple[Tuple[float, ...], Dict[str, float],
+                            Dict[str, float]]:
     """CASSINI-style phase search: grid over phase offsets of jobs[1:]
     (job 0 pinned at 0), minimizing the worst relative slowdown.
-    Returns (best_phases, jct_unstaggered, jct_staggered)."""
+    Returns (best_phases, jct_unstaggered, jct_staggered).  The zero-phase
+    schedule is always in the search set, so the staggered worst case is
+    never worse than the naive one."""
     base_phases = tuple(0.0 for _ in jobs)
-    base = _simulate_link(jobs, base_phases)
 
-    def badness(jct: Dict[str, float]) -> float:
-        return max(jct[j.name] / j.period for j in jobs)
+    def sim(phases):
+        return _simulate_links(jobs, phases, link_demands, horizon_iters, dt)
 
+    base = sim(base_phases)
     best = base_phases
-    best_val = badness(base)
+    best_jct = base
+    best_val = worst_stretch(base, jobs)
     grids = [[i / grid * j.period for i in range(grid)] for j in jobs[1:]]
     for combo in itertools.product(*grids):
         phases = (0.0, *combo)
-        val = badness(_simulate_link(jobs, phases))
+        jct = sim(phases)
+        val = worst_stretch(jct, jobs)
         if val < best_val - 1e-9:
             best_val = val
             best = phases
-    return best, base, _simulate_link(jobs, best)
+            best_jct = jct
+    return best, base, best_jct

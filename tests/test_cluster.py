@@ -1,0 +1,134 @@
+"""Horizontal multi-job cluster planner: device carving, contention
+detection via the network layer, and CASSINI staggering wired to real
+CodesignReports (paper Sec. IV-A "Horizontal")."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# the canonical contended two-tenant scenario lives next to the benchmark
+# harness so CI assertions, recorded numbers, and this suite cannot drift
+from benchmarks.paper_claims import _contended_cluster
+
+from repro.codesign import JobSpec, plan_cluster
+from repro.configs import get_config
+from repro.core.demand_builder import DemandParams
+from repro.core.types import MeshConfig, SHAPES_BY_NAME
+from repro.net.topology import dgx_cluster
+
+DP8 = MeshConfig(shape=(8,), axis_names=("data",), data_axes=("data",),
+                 model_axes=())
+SHAPE = SHAPES_BY_NAME["train_4k"]
+DPP = DemandParams(zero1=False)
+
+
+def test_two_jobs_on_hot_link_stagger_strictly_beats_naive():
+    """Acceptance: two jobs pressing the same uplinks — staggered worst-case
+    JCT is strictly better than the zero-phase naive plan."""
+    jobs, topo = _contended_cluster()
+    rep = plan_cluster(jobs, topo, grid=6)
+    assert rep.contended, "jobs spanning both racks must share uplinks"
+    for users in rep.contended.values():
+        assert set(users) == {"jobA", "jobB"}
+    # naive collision visibly stretches the worst job ...
+    assert rep.naive_worst_stretch > 1.01
+    # ... and phase staggering strictly recovers it
+    assert rep.staggered_worst_stretch < rep.naive_worst_stretch - 1e-6
+    assert rep.stagger_speedup > 1.0
+    assert rep.phases["jobA"] == 0.0  # job 0 is the pinned reference
+    assert any(p > 0 for p in rep.phases.values())
+    # contended-link demands were derived for both jobs
+    for name in ("jobA", "jobB"):
+        assert rep.link_demands[name]
+        assert all(0 < d <= 1.0 for d in rep.link_demands[name].values())
+
+
+def test_cluster_report_consistency():
+    jobs, topo = _contended_cluster()
+    rep = plan_cluster(jobs, topo, grid=4)
+    assert set(rep.naive_jct) == {"jobA", "jobB"} == set(rep.staggered_jct)
+    for jp in rep.jobs:
+        # profile compresses the job's own CodesignReport
+        assert jp.profile.period == pytest.approx(jp.report.jct)
+        assert jp.profile.comm_s == pytest.approx(jp.report.comm_time)
+        # the per-job link map covers the links it was contended on
+        for link, users in rep.contended.items():
+            if jp.spec.name in users:
+                assert jp.link_bytes[link] > 0
+    # stretches are relative to the solo period
+    for name, jct in rep.staggered_jct.items():
+        assert jct >= rep.solo_jct[name] * 0.97
+
+
+def test_single_job_staggering_is_noop():
+    jobs, topo = _contended_cluster()
+    rep = plan_cluster([jobs[0]], topo)
+    assert rep.contended == {}
+    assert rep.phases == {jobs[0].name: 0.0}
+    assert rep.naive_jct == rep.staggered_jct == rep.solo_jct
+    assert rep.stagger_speedup == 1.0
+
+
+def test_disjoint_jobs_have_no_contention():
+    """Two jobs each inside its own DGX host share no links: naive ==
+    staggered == solo."""
+    topo = dgx_cluster(2)
+    cfg = get_config("qwen2-0.5b")
+    jobs = [JobSpec("a", cfg, SHAPE, DP8, devices=topo.hosts[0],
+                    dp_params=DPP),
+            JobSpec("b", cfg, SHAPE, DP8, devices=topo.hosts[1],
+                    dp_params=DPP)]
+    rep = plan_cluster(jobs, topo)
+    assert rep.contended == {}
+    assert rep.naive_jct == rep.staggered_jct == rep.solo_jct
+
+
+def test_first_fit_carving_assigns_disjoint_blocks():
+    topo = dgx_cluster(2)
+    cfg = get_config("qwen2-0.5b")
+    jobs = [JobSpec("a", cfg, SHAPE, DP8, dp_params=DPP),
+            JobSpec("b", cfg, SHAPE, DP8, dp_params=DPP)]
+    rep = plan_cluster(jobs, topo)
+    assert rep.jobs[0].devices == tuple(range(8))
+    assert rep.jobs[1].devices == tuple(range(8, 16))
+    # explicit devices are honored and first-fit fills around them
+    jobs2 = [JobSpec("a", cfg, SHAPE, DP8, dp_params=DPP),
+             JobSpec("b", cfg, SHAPE, DP8, devices=tuple(range(8)),
+                     dp_params=DPP)]
+    rep2 = plan_cluster(jobs2, topo)
+    assert rep2.jobs[1].devices == tuple(range(8))
+    assert rep2.jobs[0].devices == tuple(range(8, 16))
+
+
+def test_cluster_validation_errors():
+    topo = dgx_cluster(2)
+    cfg = get_config("qwen2-0.5b")
+    with pytest.raises(ValueError):
+        plan_cluster([], topo)
+    with pytest.raises(ValueError):  # duplicate names
+        plan_cluster([JobSpec("x", cfg, SHAPE, DP8, dp_params=DPP),
+                      JobSpec("x", cfg, SHAPE, DP8, dp_params=DPP)], topo)
+    with pytest.raises(ValueError):  # overlapping explicit devices
+        plan_cluster(
+            [JobSpec("a", cfg, SHAPE, DP8, devices=tuple(range(8))),
+             JobSpec("b", cfg, SHAPE, DP8, devices=tuple(range(4, 12)))],
+            topo)
+    with pytest.raises(ValueError):  # cluster too small
+        plan_cluster([JobSpec("a", cfg, SHAPE, DP8),
+                      JobSpec("b", cfg, SHAPE, DP8),
+                      JobSpec("c", cfg, SHAPE, DP8)], topo)
+    with pytest.raises(ValueError):  # device count != mesh size
+        plan_cluster([JobSpec("a", cfg, SHAPE, DP8,
+                              devices=tuple(range(4)))], topo)
+
+
+def test_plan_cluster_is_deterministic():
+    jobs, topo = _contended_cluster()
+    r1 = plan_cluster(jobs, topo, grid=4)
+    r2 = plan_cluster(jobs, topo, grid=4)
+    assert r1.phases == r2.phases
+    assert r1.naive_jct == r2.naive_jct
+    assert r1.staggered_jct == r2.staggered_jct
+    assert list(r1.contended) == list(r2.contended)

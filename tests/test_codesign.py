@@ -282,6 +282,145 @@ def test_plan_iteration_selection_stays_fast():
     assert time.perf_counter() - t0 < 5.0
 
 
+def test_placement_and_plan_iteration_are_deterministic():
+    """plan_cluster (and everything stacked on plan_iteration) assumes
+    replanning the same job yields the identical report."""
+    topo = dgx_cluster(2)
+    for strategy in ("packed", "strided"):
+        assert place_mesh(DP2_TP8, topo, strategy).devices == \
+            place_mesh(DP2_TP8, topo, strategy).devices
+    cfg = get_config("qwen2-0.5b")
+    r1 = plan_iteration(cfg, SHAPE, DP2_TP8, topo, policy="priority")
+    r2 = plan_iteration(cfg, SHAPE, DP2_TP8, topo, policy="priority")
+    assert r1.jct == r2.jct and r1.comm_time == r2.comm_time
+    assert [c.algorithm for c in r1.choices] == \
+        [c.algorithm for c in r2.choices]
+    assert r1.link_hotspots == r2.link_hotspots
+
+
+def test_flowsim_second_plan_hits_cache(monkeypatch):
+    """Pricing the same demand twice through one FlowSim must not re-run
+    the network simulator (the memoization plan_iteration relies on)."""
+    import repro.ccl.select as select_mod
+    topo = dgx_cluster(2)
+    fsim = FlowSim(topo)
+    calls = []
+    real = select_mod.simulate_flowset
+    monkeypatch.setattr(select_mod, "simulate_flowset",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    cfg = get_config("qwen2-0.5b")
+    r1 = plan_iteration(cfg, SHAPE, DP16, topo, cost_model=fsim,
+                        dp_params=DemandParams(zero1=False))
+    first = len(calls)
+    assert first > 0
+    memo = len(fsim._cost_memo)
+    r2 = plan_iteration(cfg, SHAPE, DP16, topo, cost_model=fsim,
+                        dp_params=DemandParams(zero1=False))
+    assert len(calls) == first          # second pass fully cached
+    assert len(fsim._cost_memo) == memo
+    assert r1.jct == r2.jct
+    assert [c.algorithm for c in r1.choices] == \
+        [c.algorithm for c in r2.choices]
+
+
+# ---------------------------------------------------------------------------
+# ATP in-network aggregation as a first-class selection candidate
+# ---------------------------------------------------------------------------
+
+
+def test_atp_wins_gradient_reduction_on_fat_tree_both_models():
+    """Host-Net co-design: on a switched fat-tree (one worker per host) the
+    in-network-aggregation all-reduce beats every host-level algorithm for
+    latency-regime gradient chunks, under BOTH cost models."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    group = tuple(topo.accelerators)
+    task = CommTask("grad", "all_reduce", 2 ** 20, group)
+    for model in (AlphaBeta.from_topology(topo), FlowSim(topo)):
+        sel = select_for_task(task, model)
+        assert sel.algorithm == "atp", type(model).__name__
+        assert sel.costs["atp"] < sel.costs["ring"]
+
+
+def test_atp_degrades_with_switch_capacity():
+    """Multi-tenant fallback: a group larger than the switch-memory budget
+    loses the aggregation discount and atp stops winning."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    group = tuple(topo.accelerators)
+    task = CommTask("grad", "all_reduce", 2 ** 20, group)
+    full = FlowSim(topo)
+    capped = FlowSim(topo, switch_capacity=4)
+    assert capped.cost(task, "atp") > full.cost(task, "atp")
+    assert select_for_task(task, capped).algorithm != "atp"
+    ab = AlphaBeta.from_topology(topo)
+    import dataclasses
+    ab_capped = dataclasses.replace(
+        ab, params=dataclasses.replace(ab.params, atp_capacity=4))
+    assert ab_capped.cost(task, "atp") > ab.cost(task, "atp")
+    assert select_for_task(task, ab_capped).algorithm != "atp"
+    # capacity 0 = switch memory exhausted under BOTH models (None is the
+    # unlimited sentinel, matching sched.atp.aggregation_switches)
+    ab_zero = dataclasses.replace(
+        ab, params=dataclasses.replace(ab.params, atp_capacity=0))
+    assert select_for_task(task, ab_zero).algorithm != "atp"
+    assert select_for_task(
+        task, FlowSim(topo, switch_capacity=0)).algorithm != "atp"
+
+
+def test_atp_selected_end_to_end_for_chunked_gradients():
+    """plan_iteration offers atp for Lina-style chunked gradient syncs on a
+    fat-tree and a tight switch budget pushes it back out."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    mesh = MeshConfig(shape=(8,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    dpp = DemandParams(zero1=False, grad_chunks=16)
+    rep = plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                         dp_params=dpp)
+    assert "atp" in rep.algorithms_by_primitive()["all_reduce"]
+    capped = plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                            dp_params=dpp, switch_capacity=4)
+    assert "atp" not in capped.algorithms_by_primitive()["all_reduce"]
+    assert capped.comm_time >= rep.comm_time
+
+
+def test_switch_capacity_rejected_for_unconfigured_instance_model():
+    """switch_capacity must not silently diverge from what an instance
+    cost model prices with: either they match or plan_iteration refuses."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    mesh = MeshConfig(shape=(8,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    dpp = DemandParams(zero1=False, grad_chunks=16)
+    with pytest.raises(ValueError):
+        plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                       dp_params=dpp, cost_model=FlowSim(topo),
+                       switch_capacity=4)
+    # a matching budget passes, and a self-configured instance behaves
+    # like the named model with the same capacity
+    rep = plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                         dp_params=dpp,
+                         cost_model=FlowSim(topo, switch_capacity=4),
+                         switch_capacity=4)
+    named = plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                           dp_params=dpp, switch_capacity=4)
+    assert rep.algorithms_by_primitive() == named.algorithms_by_primitive()
+    assert rep.link_hotspots == named.link_hotspots
+    # an AlphaBeta instance carrying the same budget is accepted too
+    import dataclasses
+    ab = AlphaBeta.from_topology(topo)
+    ab4 = dataclasses.replace(
+        ab, params=dataclasses.replace(ab.params, atp_capacity=4))
+    plan_iteration(get_config("qwen2-0.5b"), SHAPE, mesh, topo,
+                   dp_params=dpp, cost_model=ab4, switch_capacity=4)
+
+
+def test_atp_not_offered_on_switchless_fabrics():
+    """ICI-style fabrics have no programmable aggregation point."""
+    topo = torus2d(4, 4)
+    group = tuple(topo.accelerators)
+    task = CommTask("grad", "all_reduce", 2 ** 20, group)
+    sel = select_for_task(task, FlowSim(topo))
+    assert "atp" not in sel.costs and "atp" in sel.excluded
+
+
 def test_packed_beats_strided_placement_for_tp():
     """Placement matters (the codesign claim): TP all-reduces priced on the
     real topology are cheaper when the TP group stays on NVLink."""

@@ -52,6 +52,40 @@ def test_dgx_intra_faster_than_inter(num_hosts):
     assert min_bw_intra > 2 * min_bw_inter
 
 
+def test_same_step_fanin_and_fanout_counted_once():
+    """A flow belonging to a merge group (shared dst) whose source also
+    fans out in the same step must be charged exactly once (regression:
+    the merge and multicast passes of _route_bytes overlapped)."""
+    from repro.core.demand import Flow
+    from repro.net.simulate import _route_bytes
+    topo = fat_tree(4, gpus_per_host=1)
+    flows = [Flow(0, 2, 100, "t", 0), Flow(0, 3, 100, "t", 0),
+             Flow(1, 2, 100, "t", 0)]
+    agg = set(topo.switch_nodes())
+    link_bytes = _route_bytes(topo, flows, agg)
+    # last hop into the shared destination: merged upstream -> one payload
+    assert link_bytes[("host2", 2)] == 100
+
+
+def test_multicast_discount_gated_on_capable_switches():
+    """The single-copy multicast discount only holds up to the last
+    aggregation-capable switch on a receiver's path; with a partial
+    capable set, copies diverge there and downstream links pay per
+    receiver."""
+    from repro.core.demand import Flow
+    from repro.net.simulate import _route_bytes
+    topo = fat_tree(8, gpus_per_host=1)  # 2 racks x 4 hosts, one pod
+    flows = [Flow(0, d, 100, "t", 0) for d in (1, 2, 4, 5)]
+    full = _route_bytes(topo, flows, set(topo.switch_nodes()))
+    # every switch replicates: each fabric link carries one copy
+    assert full[("tor0", "agg0")] == 100
+    partial = _route_bytes(topo, flows, {"tor0"})
+    # only tor0 replicates: the copies for rack-1 receivers 4 and 5 must
+    # already be distinct when they leave tor0
+    assert partial[("tor0", "agg0")] == 200
+    assert partial[(0, "host0")] == 100  # shared stem still single-copy
+
+
 def test_atp_reduces_traffic():
     """In-network aggregation cuts PS-bound traffic; degraded mode (switch
     capacity exhausted) falls back to host aggregation (ATP [15])."""

@@ -1,0 +1,61 @@
+"""Regression guards for benchmarks/paper_claims.py headline numbers.
+
+The benchmark harness prints derived metrics but nothing failed CI when
+they drifted; these tests lock in the orderings PR 1 claimed (and the
+cluster/ATP claims this PR adds) without pinning fragile exact values."""
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.ccl.select import AlphaBeta, FlowSim, select_for_task
+from repro.core.demand import CommTask
+from repro.net.topology import dgx_cluster
+
+
+def test_hierarchical_beats_flat_ring_on_dgx_under_both_cost_models():
+    """PR 1's benchmark claim: for large gradient syncs on dgx_cluster the
+    Intra-Inter hierarchical all-reduce beats the topology-blind flat ring
+    — under the closed-form AND the topology-priced model."""
+    topo = dgx_cluster(2)
+    group = tuple(topo.accelerators)
+    task = CommTask("grad", "all_reduce", 64 * 2 ** 20, group)
+    for model in (AlphaBeta.from_topology(topo), FlowSim(topo)):
+        sel = select_for_task(task, model)
+        assert sel.algorithm == "hierarchical", type(model).__name__
+        assert sel.costs["hierarchical"] < sel.costs["ring"]
+        # the win is structural (NIC-tier bytes), not a rounding artifact
+        assert sel.costs["ring"] / sel.costs["hierarchical"] > 1.1
+
+
+def test_bench_codesign_hierarchical_number_holds():
+    """The end-to-end benchmark (demand -> placement -> selection -> JCT)
+    must keep showing auto-selection beating forced flat ring."""
+    from benchmarks.paper_claims import bench_codesign_hierarchical
+    derived, details = bench_codesign_hierarchical()
+    assert derived > 1.2  # comm-time speedup of auto vs forced ring
+    assert "hierarchical" in details["selected"]
+    assert details["auto_jct_s"] <= details["ring_jct_s"]
+
+
+def test_bench_cluster_stagger_number_holds():
+    """The horizontal-planner benchmark: staggering two tenants on shared
+    uplinks must recover worst-case JCT."""
+    from benchmarks.paper_claims import bench_cluster_planner
+    derived, details = bench_cluster_planner()
+    assert derived > 1.0
+    assert details["contended_links"] >= 1
+    assert details["staggered_worst_stretch"] < \
+        details["naive_worst_stretch"]
+
+
+def test_bench_atp_candidate_number_holds():
+    """The Host-Net benchmark: atp wins the latency-regime gradient chunk
+    on a switched fat-tree and loses it when switch memory is exhausted."""
+    from benchmarks.paper_claims import bench_atp_candidate
+    derived, details = bench_atp_candidate()
+    assert derived > 1.0
+    assert details["selected"] == "atp"
+    assert details["capped_selected"] != "atp"

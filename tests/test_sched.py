@@ -10,7 +10,8 @@ from repro.configs import get_config
 from repro.core.demand import CommDemand, CommTask, ComputeTask
 from repro.core.demand_builder import build_demand, janus_traffic_ratio
 from repro.core.types import SHAPES_BY_NAME, SINGLE_POD_MESH
-from repro.sched.flows import JobProfile, multi_job_jct, stagger_jobs
+from repro.sched.flows import (JobProfile, multi_job_jct, stagger_jobs,
+                               worst_stretch)
 from repro.sched.tasks import simulate_iteration
 
 CP = CostParams()
@@ -127,3 +128,87 @@ def test_multi_job_no_contention_when_alone():
     jobs = [JobProfile("solo", 0.01, 0.005)]
     jct = multi_job_jct(jobs, [0.0])
     assert jct["solo"] == pytest.approx(0.015, rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# flow-scheduler properties (hypothesis; stub fallback via conftest)
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.tuples(st.floats(2e-3, 2e-2), st.floats(2e-3, 2e-2)),
+                min_size=1, max_size=3))
+@settings(max_examples=6, deadline=None)
+def test_stretch_at_least_one_and_stagger_never_worse(specs):
+    """Sharing a link can only slow a job down (stretch >= 1 up to dt
+    noise), and the staggered worst case is never worse than zero-phase
+    (the zero-phase schedule is in the search set)."""
+    jobs = [JobProfile(f"j{i}", comp, comm)
+            for i, (comp, comm) in enumerate(specs)]
+    dt = min(j.period for j in jobs) / 300
+    phases, base, best = stagger_jobs(jobs, grid=3, horizon_iters=6, dt=dt)
+    for j in jobs:
+        assert base[j.name] >= j.period * 0.97
+        assert best[j.name] >= j.period * 0.97
+    assert worst_stretch(best, jobs) <= worst_stretch(base, jobs) + 1e-9
+    assert phases[0] == 0.0  # job 0 pinned
+
+
+@given(st.floats(2e-3, 2e-2), st.floats(2e-3, 2e-2))
+@settings(max_examples=5, deadline=None)
+def test_single_job_staggering_is_noop(comp, comm):
+    job = JobProfile("solo", comp, comm)
+    dt = job.period / 300
+    phases, base, best = stagger_jobs([job], grid=5, horizon_iters=6, dt=dt)
+    assert phases == (0.0,)
+    assert base == best
+    assert base["solo"] == pytest.approx(job.period, rel=0.03)
+
+
+def test_multi_link_contention_is_localized():
+    """Jobs a+b share link l1; job c presses l2 alone — only a and b may
+    stretch (the generalized link_demands path plan_cluster uses)."""
+    jobs = [JobProfile("a", 0.01, 0.01), JobProfile("b", 0.01, 0.01),
+            JobProfile("c", 0.01, 0.01)]
+    demands = [{"l1": 1.0}, {"l1": 1.0}, {"l2": 0.8}]
+    jct = multi_job_jct(jobs, (0.0, 0.0, 0.0), link_demands=demands,
+                        horizon_iters=10)
+    assert jct["c"] == pytest.approx(0.02, rel=0.03)  # uncontended
+    assert jct["a"] > 0.0215 and jct["b"] > 0.0215    # collided
+    # a job throttles at its most-contended link: adding an idle link
+    # to its map must not slow it further
+    demands2 = [{"l1": 1.0, "l3": 1.0}, {"l1": 1.0}, {"l2": 0.8}]
+    jct2 = multi_job_jct(jobs, (0.0, 0.0, 0.0), link_demands=demands2,
+                         horizon_iters=10)
+    assert jct2["a"] == pytest.approx(jct["a"], rel=1e-6)
+
+
+def test_heterogeneous_periods_stay_finite():
+    """A slow tenant sharing with a ~12x faster one must still get a real
+    JCT (regression: a global iteration budget starved it to inf)."""
+    jobs = [JobProfile("fast", 0.001, 0.001), JobProfile("slow", 0.02, 0.02)]
+    jct = multi_job_jct(jobs, (0.0, 0.0),
+                        link_demands=[{"l": 1.0}, {"l": 1.0}],
+                        horizon_iters=12, dt=2e-5)
+    assert all(v != float("inf") for v in jct.values())
+    assert jct["fast"] >= 0.002 * 0.97
+    # slow's burst is contended by fast's frequent bursts: stretched but
+    # bounded well below a pathological blow-up
+    assert 0.04 * 0.97 <= jct["slow"] <= 0.08
+
+
+def test_flow_scheduler_length_mismatches_raise():
+    jobs = [JobProfile("a", 0.01, 0.01), JobProfile("b", 0.01, 0.01)]
+    with pytest.raises(ValueError):
+        multi_job_jct(jobs, (0.0, 0.0), link_demands=[{"l": 1.0}])
+    with pytest.raises(ValueError):
+        multi_job_jct(jobs, (0.0,))
+
+
+def test_simulate_link_dt_convergence():
+    """The public dt knob (satellite fix: no more hard-coded 1e-4):
+    halving dt changes every job's JCT by < 1%."""
+    jobs = [JobProfile("a", 0.012, 0.008), JobProfile("b", 0.010, 0.010)]
+    coarse = multi_job_jct(jobs, (0.0, 0.003), horizon_iters=20, dt=1e-4)
+    fine = multi_job_jct(jobs, (0.0, 0.003), horizon_iters=20, dt=5e-5)
+    for name in coarse:
+        assert abs(coarse[name] - fine[name]) / fine[name] < 0.01
