@@ -426,6 +426,53 @@ def bench_atp_candidate() -> Tuple[float, Dict]:
 
 
 # ---------------------------------------------------------------------------
+# Para. lever 3: gradient compression as a selection candidate
+# ---------------------------------------------------------------------------
+
+
+def _compression_setting():
+    """One worker per host on a heavily oversubscribed fat-tree: gradient
+    all-reduces are bandwidth-bound, the compression sweet spot."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    return topo, tuple(topo.accelerators)
+
+
+def bench_compression_candidate() -> Tuple[float, Dict]:
+    """Compressed candidates (repro.compress) competing in selection under
+    a 1% error budget: derived = the chosen codec candidate's speedup over
+    the best lossless algorithm for a bandwidth-regime gradient sync; the
+    latency-regime chunk must reject compression (codec overhead
+    dominates), and plan_iteration must turn the win into lower JCT."""
+    topo, group = _compression_setting()
+    model = FlowSim(topo)
+    big = CommTask("grad", "all_reduce", 64 * 2 ** 20, group)
+    lossless = select_for_task(big, model)
+    comp = select_for_task(big, model, error_budget=0.01)
+    small = CommTask("gchunk", "all_reduce", 2 ** 12, group)
+    comp_small = select_for_task(small, model, error_budget=0.01)
+
+    mesh = MeshConfig(shape=(8,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    dpp = DemandParams(zero1=False)
+    cfg = get_config("qwen2-0.5b")
+    shape = SHAPES_BY_NAME["train_4k"]
+    base = plan_iteration(cfg, shape, mesh, topo, policy="serial",
+                          dp_params=dpp)
+    budget = plan_iteration(cfg, shape, mesh, topo, policy="serial",
+                            dp_params=dpp, error_budget=0.01)
+    return lossless.cost / comp.cost, {
+        "selected_64MiB": comp.algorithm,
+        "lossless_ms": round(lossless.cost * 1e3, 2),
+        "compressed_ms": round(comp.cost * 1e3, 2),
+        "latency_regime_pick": comp_small.algorithm,
+        "e2e_jct_s": {"lossless": round(base.jct, 3),
+                      "budget_1pct": round(budget.jct, 3)},
+        "wire_GiB_saved": round(budget.wire_bytes_saved / 2 ** 30, 2),
+        "paper": "quantization/sparsification shrink the exposed-comm "
+                 "term (Shi/Tang quantitative surveys)"}
+
+
+# ---------------------------------------------------------------------------
 # Motivation: exposed communication fraction (up to 60% at Meta)
 # ---------------------------------------------------------------------------
 
@@ -458,6 +505,7 @@ ALL_BENCHMARKS = {
     "codesign_placement": bench_codesign_placement,
     "cluster_planner": bench_cluster_planner,
     "atp_candidate": bench_atp_candidate,
+    "compression_candidate": bench_compression_candidate,
     "exposed_comm_fraction": bench_exposed_comm_fraction,
 }
 
@@ -511,7 +559,35 @@ def run_smoke() -> None:
           packed.comm_time < strided.comm_time,
           f"{strided.comm_time / packed.comm_time:.2f}x")
 
-    # 4. Horizontal: plan_cluster staggering recovers worst-case JCT
+    # 4. Compression: a 1% error budget wins bandwidth-regime gradient
+    # syncs on the oversubscribed fat-tree, is rejected in the latency
+    # regime, and strictly lowers end-to-end JCT
+    ctopo, cgroup = _compression_setting()
+    big = CommTask("g", "all_reduce", 64 * 2 ** 20, cgroup)
+    small = CommTask("g", "all_reduce", 2 ** 12, cgroup)
+    for model in (AlphaBeta.from_topology(ctopo), FlowSim(ctopo)):
+        mn = type(model).__name__
+        sel = select_for_task(big, model, error_budget=0.01)
+        lossless = select_for_task(big, model)
+        check(f"compression wins bandwidth-regime grad AR ({mn})",
+              sel.algorithm.endswith("+q8") and sel.cost < lossless.cost,
+              f"{sel.algorithm}, {lossless.cost / sel.cost:.2f}x")
+        ssel = select_for_task(small, model, error_budget=0.01)
+        check(f"codec overhead rejected in latency regime ({mn})",
+              "+" not in ssel.algorithm, f"-> {ssel.algorithm}")
+    cmesh = MeshConfig(shape=(8,), axis_names=("data",),
+                       data_axes=("data",), model_axes=())
+    cdpp = DemandParams(zero1=False)
+    cbase = plan_iteration(cfg, shape, cmesh, ctopo, policy="serial",
+                           dp_params=cdpp)
+    cbudget = plan_iteration(cfg, shape, cmesh, ctopo, policy="serial",
+                             dp_params=cdpp, error_budget=0.01)
+    check("error budget strictly lowers JCT end-to-end",
+          cbudget.jct < cbase.jct and cbudget.wire_bytes_saved > 0,
+          f"{cbase.jct:.3f}s -> {cbudget.jct:.3f}s, "
+          f"{cbudget.wire_bytes_saved / 2 ** 30:.1f} GiB saved")
+
+    # 5. Horizontal: plan_cluster staggering recovers worst-case JCT
     jobs, ctopo = _contended_cluster()
     rep = plan_cluster(jobs, ctopo, grid=6)
     check("two tenants contend on shared uplinks", len(rep.contended) >= 1,

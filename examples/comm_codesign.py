@@ -87,6 +87,30 @@ def main():
           f"({ring.comm_time/max(auto.comm_time, 1e-12):.2f}x)")
 
     print("=" * 72)
+    print("[2b] Compression (repro.compress): error budget admits lossy "
+          "candidates")
+    # one worker per host on an oversubscribed fat-tree: gradient syncs are
+    # bandwidth-bound, the compression sweet spot (canonical copy:
+    # benchmarks.paper_claims.bench_compression_candidate, asserted in CI)
+    ctopo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    dp8 = MeshConfig(shape=(8,), axis_names=("data",), data_axes=("data",),
+                     model_axes=())
+    small_cfg = get_config("qwen2-0.5b")
+    cdpp = DemandParams(zero1=False)
+    base = plan_iteration(small_cfg, shape, dp8, ctopo, policy="serial",
+                          dp_params=cdpp)
+    for budget in (0.01, 0.5):
+        comp = plan_iteration(small_cfg, shape, dp8, ctopo, policy="serial",
+                              dp_params=cdpp, error_budget=budget)
+        hist = comp.algorithms_by_primitive().get("all_reduce", {})
+        picks = ", ".join(f"{a} x{k}" for a, k in sorted(hist.items()))
+        print(f"    budget {budget:4.2f}: JCT {base.jct:.3f}s -> "
+              f"{comp.jct:.3f}s ({base.jct / comp.jct:.2f}x), wire bytes "
+              f"saved {comp.wire_bytes_saved / 2 ** 30:6.2f} GiB  [{picks}]")
+    print(f"    budget 0   : baseline keeps every collective exact "
+          f"({', '.join(sorted(base.algorithms_by_primitive().get('all_reduce', {})))})")
+
+    print("=" * 72)
     print("[3] CCL: algorithm selection per payload, AlphaBeta vs FlowSim")
     ab = AlphaBeta.from_topology(topo)
     fsim = FlowSim(topo)

@@ -3,14 +3,20 @@
 Three faces of the same layer:
   * ``algorithms``  — collective algorithms as explicit flow schedules
                       (ring, bidirectional ring, recursive halving/doubling,
-                      tree, direct all-to-all) usable by the network simulator
+                      tree, direct all-to-all) usable by the network
+                      simulator, plus compressed candidates (``ring+q8``,
+                      ``ps+topk``, ...) wrapping any base schedule with a
+                      ``repro.compress`` codec's wire-byte ratio
   * ``primitives``  — the same algorithms as executable JAX programs
-                      (shard_map + ppermute), validated against jax.lax psum
+                      (shard_map + ppermute), validated against jax.lax
+                      psum — including the quantized compressed ring
   * ``cost``        — alpha-beta cost models; ``select`` does NCCL-style
-                      auto-selection; ``synth`` does TACCL-style sketch-guided
-                      synthesis on an arbitrary topology
+                      auto-selection (with an ``error_budget`` gate for
+                      lossy candidates); ``synth`` does TACCL-style
+                      sketch-guided synthesis on an arbitrary topology
 """
-from repro.ccl.algorithms import ALGORITHMS, generate_flows  # noqa: F401
+from repro.ccl.algorithms import (ALGORITHMS,  # noqa: F401
+                                  COMPRESSED_CANDIDATES, generate_flows)
 from repro.ccl.cost import algo_cost, CostParams  # noqa: F401
 from repro.ccl.select import (AlphaBeta, CostModel, FlowSim,  # noqa: F401
                               Selection, select_algorithm, select_for_task)

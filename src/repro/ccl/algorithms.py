@@ -12,6 +12,8 @@ bytes per step.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
 import math
 from typing import Callable, Dict, List, Sequence
 
@@ -367,6 +369,51 @@ def atp_all_reduce(task: CommTask, ps: int = None) -> FlowSet:
     return fs
 
 
+# ---------------------------------------------------------------------------
+# Compressed candidates (repro.compress): same schedule, fewer wire bytes
+# ---------------------------------------------------------------------------
+
+
+def compressed_flows(task: CommTask, base: str, codec_name: str,
+                     **kwargs) -> FlowSet:
+    """Wrap a base algorithm's schedule with a codec: every flow carries
+    ``wire_ratio`` of its uncompressed bytes (encode before the wire,
+    decode-accumulate after — the executable analogue is
+    ``ccl.primitives.compressed_ring_all_reduce``).  ``base`` may be
+    ``ps``, the parameter-server alias for the ``atp`` flow pattern.
+
+    Approximation: the ratio is applied uniformly per step.  For top-k
+    that understates later reduce-scatter steps (partial sums densify);
+    the nominal ``CodecSpec.wire_ratio`` already includes index overhead
+    to compensate."""
+    from repro.compress.codec import base_algorithm, codec_spec
+
+    spec = codec_spec(codec_name)
+    gen = ALGORITHMS[task.primitive][base_algorithm(base)]
+    fs = gen(task, **kwargs)
+    fs.algorithm = f"{base}+{codec_name}"
+    fs.flows = [
+        dataclasses.replace(f, size_bytes=max(int(f.size_bytes
+                                                  * spec.wire_ratio), 1))
+        for f in fs.flows]
+    return fs
+
+
+# The canonical compressed all-reduce candidates selection prices (any
+# "<base>+<codec>" pair also works ad hoc through generate_flows):
+COMPRESSED_CANDIDATES = ("ring+q8", "bidir_ring+q8", "hierarchical+q8",
+                         "ring+topk", "ps+topk")
+
+
+def _compressed_registry() -> Dict[str, Callable[[CommTask], FlowSet]]:
+    out: Dict[str, Callable[[CommTask], FlowSet]] = {}
+    for name in COMPRESSED_CANDIDATES:
+        base, codec = name.split("+", 1)
+        out[name] = functools.partial(compressed_flows, base=base,
+                                      codec_name=codec)
+    return out
+
+
 ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
     "all_reduce": {
         "ring": ring_all_reduce,
@@ -376,6 +423,7 @@ ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
         "torus2d": torus2d_all_reduce,
         "hierarchical": hierarchical_all_reduce,
         "atp": atp_all_reduce,
+        **_compressed_registry(),
     },
     "all_gather": {"ring": ring_all_gather},
     "reduce_scatter": {"ring": ring_reduce_scatter},
@@ -387,9 +435,16 @@ ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
 def generate_flows(task: CommTask, algorithm: str, **kwargs) -> FlowSet:
     """Generate ``algorithm``'s flow schedule for ``task``.  Extra kwargs go
     to the generator (e.g. ``hosts=`` for hierarchical, ``rows=`` for
-    torus2d)."""
+    torus2d).  ``"<base>+<codec>"`` names not in the canonical registry are
+    composed on the fly (any base algorithm x registered codec)."""
     prims = ALGORITHMS[task.primitive]
     if algorithm not in prims:
+        if "+" in algorithm:
+            from repro.compress.codec import base_algorithm
+
+            base, codec = algorithm.split("+", 1)
+            if base_algorithm(algorithm) in prims:
+                return compressed_flows(task, base, codec, **kwargs)
         raise KeyError(f"{algorithm!r} not available for {task.primitive}; "
                        f"have {list(prims)}")
     return prims[algorithm](task, **kwargs)

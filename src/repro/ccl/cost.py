@@ -30,15 +30,48 @@ class CostParams:
     # (same convention as sched.atp.aggregation_switches).  Groups beyond it
     # degrade to host PS aggregation (the multi-tenant fallback).
     atp_capacity: Optional[int] = None
+    # gradient compression (repro.compress): encode/decode modeled as
+    # ``spec.passes`` full-payload memory passes at ``codec_bw`` bytes/s
+    # plus a fixed ``codec_alpha`` launch latency per algorithm step — the
+    # term that makes compression lose in the latency regime even though
+    # it always shrinks the bandwidth term.
+    codec_bw: float = 200e9
+    codec_alpha: float = 2e-6
 
 
 def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
               cp: CostParams) -> float:
-    """Predicted completion time (seconds) of one collective."""
+    """Predicted completion time (seconds) of one collective.
+
+    Compressed candidates (``"<base>+<codec>"``, e.g. ``ring+q8``) are
+    priced as: base latency term + base bandwidth term scaled by the
+    codec's wire ratio + encode/decode overhead (``codec_bw`` /
+    ``codec_alpha``)."""
     n = float(size_bytes)
     a, b = cp.alpha, cp.link_bw
     if p <= 1:
         return 0.0
+    if "+" in algorithm:
+        import dataclasses
+
+        from repro.compress.codec import base_algorithm, split_algorithm
+        from repro.compress.codec import codec_spec
+
+        _, codec_name = split_algorithm(algorithm)
+        base = base_algorithm(algorithm)
+        spec = codec_spec(codec_name)
+        lat = algo_cost(primitive, base, 0, p, cp)
+        full = algo_cost(primitive, base, size_bytes, p, cp)
+        # step count: every closed form's latency term is linear in alpha
+        # (alpha * steps), so lat(alpha=ref)/ref recovers it exactly — also
+        # when the caller's alpha is 0, where the per-step codec launch
+        # latency must still be charged
+        a_ref = a if a > 0 else 1e-6
+        lat_ref = lat if a > 0 else algo_cost(
+            primitive, base, 0, p, dataclasses.replace(cp, alpha=a_ref))
+        steps = lat_ref / a_ref
+        return lat + (full - lat) * spec.wire_ratio \
+            + steps * cp.codec_alpha + spec.passes * n / cp.codec_bw
     if primitive == "all_reduce":
         if algorithm == "ring":
             return 2 * (p - 1) * a + 2 * (p - 1) / p * n / b

@@ -127,6 +127,68 @@ def ring_reduce_scatter(x: jax.Array, axis_name: str, axis_size: int
     return buf
 
 
+def compressed_ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int,
+                               bits: int = 8) -> jax.Array:
+    """Quantized ring All-Reduce (the executable face of the ``ring+q8`` /
+    ``ring+q4`` selection candidates): every reduce-scatter hop quantizes
+    its chunk to ``bits`` (uniform symmetric, per-chunk fp32 scale),
+    ppermutes the int8 payload + scale, and dequant-accumulates; the
+    all-gather phase encodes the reduced chunk once and forwards the
+    compressed payload hop to hop.
+
+    Wire bytes drop to ~``bits/32`` of the fp32 ring (plus one scale per
+    chunk per hop) — ``bits=4`` payloads are nibble-packed, two values per
+    byte, so the saving is real on the wire, not just in the dtype.
+    Accuracy: each of the ``p-1`` accumulation hops re-quantizes the
+    partial sum, so the result matches ``psum`` within
+    ~``p * absmax / (2^(bits-1) - 1)`` per element — the codec tolerance
+    the multi-device parity test asserts, and the bias the error-feedback
+    codecs (``repro.compress``) remove across iterations."""
+    from repro.kernels.compress.ref import (dequantize_ref, pack_int4,
+                                            quantize_ref, unpack_int4)
+
+    p = axis_size
+    if p == 1:
+        return x
+    idx = lax.axis_index(axis_name)
+    flat, n, _ = _pad_to(x, p)
+    chunks = flat.reshape(p, -1).astype(jnp.float32)
+    clen = chunks.shape[1]
+    right = [(i, (i + 1) % p) for i in range(p)]
+
+    def encode(v):
+        q, scale = quantize_ref(v, bits=bits)
+        if bits == 4:
+            q = pack_int4(q)
+        return q, scale.reshape(1)
+
+    def decode(q, scale):
+        if bits == 4:
+            q = unpack_int4(q, clen)
+        return dequantize_ref(q, scale[0])
+
+    def send(v):
+        q, scale = encode(v)
+        q = lax.ppermute(q, axis_name, right)
+        scale = lax.ppermute(scale, axis_name, right)
+        return decode(q, scale)
+
+    # ---- reduce-scatter: dequant-accumulate each hop ----
+    buf = jnp.take(chunks, idx, axis=0)
+    for s in range(p - 1):
+        buf = send(buf) + jnp.take(chunks, (idx - s - 1) % p, axis=0)
+
+    # ---- all-gather: encode once, forward the compressed payload ----
+    q, scale = encode(buf)
+    out = jnp.zeros_like(chunks)
+    out = _dyn_set(out, (idx + 1) % p, decode(q, scale))
+    for s in range(p - 1):
+        q = lax.ppermute(q, axis_name, right)
+        scale = lax.ppermute(scale, axis_name, right)
+        out = _dyn_set(out, (idx - s) % p, decode(q, scale))
+    return out.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
 def latency_bound_all_reduce(x: jax.Array, axis_name: str, axis_size: int
                              ) -> jax.Array:
     """Recursive doubling: log2(p) exchanges of the FULL payload.
@@ -156,6 +218,8 @@ IMPLEMENTATIONS: dict = {
     "ring": ring_all_reduce,
     "bidir_ring": bidir_ring_all_reduce,
     "recursive_doubling": latency_bound_all_reduce,
+    "ring_q8": functools.partial(compressed_ring_all_reduce, bits=8),
+    "ring_q4": functools.partial(compressed_ring_all_reduce, bits=4),
 }
 
 

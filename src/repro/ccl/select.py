@@ -24,6 +24,11 @@ The "Host-Net" arrow (paper Sec. IV-B) runs through here too: the ``atp``
 in-network-aggregation all-reduce competes like any other candidate on
 switched topologies, with ``sched.atp.aggregation_switches`` supplying the
 aggregation capability and the multi-tenant switch-memory fallback.
+
+So does the compression lever (``repro.compress``): ``"<base>+<codec>"``
+candidates such as ``ring+q8`` compete on wire-scaled schedules plus
+encode/decode overhead, gated by ``select_for_task``'s ``error_budget``
+(default 0 = lossless only).
 """
 from __future__ import annotations
 
@@ -34,6 +39,8 @@ from typing import Dict, List, Optional, Protocol, Tuple
 
 from repro.ccl.algorithms import ALGORITHMS, generate_flows
 from repro.ccl.cost import CostParams, algo_cost
+from repro.compress.codec import (SPECS, base_algorithm, codec_spec,
+                                  split_algorithm)
 from repro.core.demand import CommTask, FlowSet
 from repro.net.simulate import simulate_flowset
 from repro.net.topology import Topology
@@ -53,10 +60,12 @@ def is_square(p: int) -> bool:
 
 
 def structurally_eligible(algorithm: str, p: int) -> bool:
-    """Group-shape guards that hold regardless of how costs are computed."""
-    if algorithm == "halving_doubling" and p & (p - 1):
+    """Group-shape guards that hold regardless of how costs are computed.
+    Compressed candidates (``ring+q8``) inherit their base's guards."""
+    base = base_algorithm(algorithm)
+    if base == "halving_doubling" and p & (p - 1):
         return False  # needs power-of-two
-    if algorithm == "torus2d" and not is_square(p):
+    if base == "torus2d" and not is_square(p):
         return False  # needs a square grid layout
     return True
 
@@ -115,13 +124,14 @@ class AlphaBeta:
     topo: Optional[Topology] = None
 
     def supports(self, task: CommTask, algorithm: str) -> bool:
-        if algorithm == "hierarchical":
+        base = base_algorithm(algorithm)  # compressed names inherit base's
+        if base == "hierarchical":
             if self.topo is not None:
                 return _hierarchical_partition_ok(self.topo, task.group)
             m = self.params.gpus_per_host
             p = len(task.group)
             return m > 1 and p > m and p % m == 0
-        if algorithm == "atp":
+        if base == "atp":
             # in-network aggregation needs programmable switches on the
             # fabric; with only closed-form params, a switched inter-host
             # tier (inter_bw) is the eligibility proxy
@@ -133,19 +143,20 @@ class AlphaBeta:
     def cost(self, task: CommTask, algorithm: str) -> float:
         cp = self.params
         p = len(task.group)
-        if algorithm == "atp" and not cp.inter_bw:
+        base = base_algorithm(algorithm)
+        if base == "atp" and not cp.inter_bw:
             # switched but non-hierarchical fabric (e.g. one NIC per host):
             # the aggregation tier runs at the bottleneck link bandwidth
             cp = dataclasses.replace(cp, inter_bw=cp.link_bw)
-        if algorithm == "hierarchical" and self.topo is not None:
+        if base == "hierarchical" and self.topo is not None:
             # the placed group's actual per-host size, not the nominal one
             m = len(self.topo.host_groups(task.group)[0])
             if m != cp.gpus_per_host:
                 cp = dataclasses.replace(cp, gpus_per_host=m)
-        elif (algorithm not in ("hierarchical", "atp")
+        elif (base not in ("hierarchical", "atp")
                 and cp.gpus_per_host > 1
                 and p > cp.gpus_per_host and cp.inter_bw):
-            share = _NIC_SHARING.get(algorithm, 1.0) or cp.gpus_per_host
+            share = _NIC_SHARING.get(base, 1.0) or cp.gpus_per_host
             cp = dataclasses.replace(cp, link_bw=cp.inter_bw / share)
         return algo_cost(task.primitive, algorithm, task.size_bytes, p, cp)
 
@@ -196,11 +207,19 @@ class FlowSim:
     (ATP's multi-tenant constraint, forwarded to
     ``sched.atp.aggregation_switches``): groups larger than it lose the
     aggregation discount and the ``atp`` candidate is priced as degraded
-    host PS aggregation."""
+    host PS aggregation.
 
-    def __init__(self, topo: Topology, switch_capacity: Optional[int] = None):
+    Compressed candidates (``ring+q8``, ``ps+topk``, ...) are simulated on
+    their wire-scaled flowsets plus encode/decode overhead:
+    ``codec_alpha`` per schedule step and ``spec.passes`` full-payload
+    passes at ``codec_bw`` bytes/s (same model as ``CostParams``)."""
+
+    def __init__(self, topo: Topology, switch_capacity: Optional[int] = None,
+                 codec_bw: float = 200e9, codec_alpha: float = 2e-6):
         self.topo = topo
         self.switch_capacity = switch_capacity
+        self.codec_bw = codec_bw
+        self.codec_alpha = codec_alpha
         self._cost_memo: Dict[Tuple, float] = {}
         self._flow_memo: Dict[Tuple, FlowSet] = {}
 
@@ -208,9 +227,10 @@ class FlowSim:
         return (task.primitive, algorithm, task.size_bytes, task.group)
 
     def supports(self, task: CommTask, algorithm: str) -> bool:
-        if algorithm == "hierarchical":
+        base = base_algorithm(algorithm)  # compressed names inherit base's
+        if base == "hierarchical":
             return _hierarchical_partition_ok(self.topo, task.group)
-        if algorithm == "atp":
+        if base == "atp":
             # needs programmable switches below a host structure (fat-tree /
             # DGX NIC tier); pure ICI fabrics have no aggregation point
             return bool(self.topo.hosts) and bool(self.topo.switch_nodes())
@@ -227,19 +247,25 @@ class FlowSim:
         key = self._key(task, algorithm)
         if key not in self._cost_memo:
             agg = None
-            if algorithm == "atp":
+            if base_algorithm(algorithm) == "atp":
                 agg = aggregation_switches(self.topo, task.group,
                                            self.switch_capacity)
-            self._cost_memo[key] = simulate_flowset(
-                self.topo, self.flowset(task, algorithm), aggregate_at=agg)
+            fs = self.flowset(task, algorithm)
+            t = simulate_flowset(self.topo, fs, aggregate_at=agg)
+            _, codec = split_algorithm(algorithm)
+            if codec is not None:
+                spec = codec_spec(codec)
+                t += fs.num_steps * self.codec_alpha \
+                    + spec.passes * task.size_bytes / self.codec_bw
+            self._cost_memo[key] = t
         return self._cost_memo[key]
 
 
 def flows_on_topology(topo: Topology, task: CommTask,
                       algorithm: str) -> FlowSet:
-    """`generate_flows`, but topology-aware: hierarchical algorithms get the
-    physical host partition of the task's (placed) group."""
-    if algorithm == "hierarchical":
+    """`generate_flows`, but topology-aware: hierarchical algorithms (plain
+    or compressed) get the physical host partition of the (placed) group."""
+    if base_algorithm(algorithm) == "hierarchical":
         return generate_flows(task, algorithm,
                               hosts=topo.host_groups(task.group))
     return generate_flows(task, algorithm)
@@ -261,13 +287,38 @@ class Selection:
 
 
 def select_for_task(task: CommTask, model: CostModel,
-                    allow: Optional[Tuple[str, ...]] = None) -> Selection:
-    """Pick the cheapest eligible algorithm for ``task`` under ``model``."""
+                    allow: Optional[Tuple[str, ...]] = None,
+                    error_budget: float = 0.0) -> Selection:
+    """Pick the cheapest eligible algorithm for ``task`` under ``model``.
+
+    ``error_budget`` gates compressed candidates: a ``"<base>+<codec>"``
+    name competes only if the codec's effective relative error (see
+    ``CodecSpec.effective_error``) fits the budget.  The default budget of
+    0 excludes all lossy candidates — exactness is opt-in per task.  Only
+    a single-name ``allow`` (a force, e.g. the driver's ``force=`` path)
+    bypasses the budget — forcing one compressed algorithm is an explicit
+    accuracy decision; a generic whitelist still respects the budget."""
     p = len(task.group)
+    forced = allow is not None and len(allow) == 1
     costs: Dict[str, float] = {}
     excluded: List[str] = []
-    for name in ALGORITHMS[task.primitive]:
+    names = list(ALGORITHMS[task.primitive])
+    if allow:
+        # ad hoc "<base>+<codec>" combos beyond the canonical registry are
+        # explicitly allowable (generate_flows/algo_cost compose them)
+        for name in allow:
+            if name not in names and "+" in name:
+                base, codec = split_algorithm(name)
+                if base_algorithm(name) in ALGORITHMS[task.primitive] \
+                        and codec in SPECS:
+                    names.append(name)
+    for name in names:
         if allow and name not in allow:
+            continue
+        _, codec = split_algorithm(name)
+        if codec is not None and not forced and \
+                codec_spec(codec).effective_error > error_budget:
+            excluded.append(name)
             continue
         if not structurally_eligible(name, p) or \
                 not model.supports(task, name):

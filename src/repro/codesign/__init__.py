@@ -43,6 +43,15 @@ together:
 ``sched.atp`` exposes the aggregation capability (with the multi-tenant
 switch-memory fallback) and both cost models price the ``atp`` all-reduce
 against ``hierarchical`` and friends on switched topologies.
+
+So is gradient compression (``repro.compress``):
+``plan_iteration(error_budget=...)`` admits lossy candidates
+(``ring+q8``, ``ps+topk``, ...) into per-task selection — a float for
+every task or a primitive -> budget dict — and the ``CodesignReport``
+surfaces the chosen codecs (``codecs_by_primitive``) and the on-wire
+bytes saved (``wire_bytes_saved``).  ``JobSpec.error_budget`` carries the
+same knob through ``plan_cluster``, where smaller per-tenant flows shrink
+what the horizontal layer must stagger.
 """
 from repro.codesign.placement import Placement, place_mesh  # noqa: F401
 from repro.codesign.driver import (CodesignReport, TaskChoice,  # noqa: F401

@@ -51,6 +51,10 @@ class JobSpec:
     policy: Policy = "priority"
     dp_params: DemandParams = DemandParams()
     force: Optional[Dict[str, str]] = None
+    # per-tenant compression tolerance (repro.compress): admits compressed
+    # candidates into this job's selection; smaller per-job flows also
+    # shrink what the horizontal layer sees on contended links
+    error_budget: float = 0.0
 
 
 @dataclass
@@ -178,7 +182,8 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
             spec.cfg, spec.shape, spec.mesh, topo, policy=spec.policy,
             placement=placement, cost_model=cost_model,
             dp_params=spec.dp_params, force=spec.force, hotspot_k=n_links,
-            switch_capacity=switch_capacity)
+            switch_capacity=switch_capacity,
+            error_budget=spec.error_budget)
         plans.append(JobPlan(
             spec=spec, devices=devs, report=report,
             profile=_job_profile(spec.name, report),

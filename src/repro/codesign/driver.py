@@ -22,6 +22,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
                               flows_on_topology, select_for_task)
+from repro.compress.codec import base_algorithm, codec_spec, split_algorithm
 from repro.core.demand_builder import DemandParams, build_demand
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import link_utilization
@@ -43,6 +44,10 @@ class TaskChoice:
     algorithm: str
     cost_s: float
     costs: Dict[str, float] = field(default_factory=dict)
+    # compression (repro.compress): the codec riding on the algorithm
+    # (None = uncompressed) and its wire-byte ratio
+    codec: Optional[str] = None
+    wire_ratio: float = 1.0
 
 
 @dataclass
@@ -59,6 +64,12 @@ class CodesignReport:
     choices: List[TaskChoice] = field(default_factory=list)
     link_hotspots: List[Tuple[Tuple, float]] = field(default_factory=list)
     sim: Optional[SimResult] = None
+    # compression accounting: the error budget selection ran under
+    # (verbatim — a float, or the caller's primitive -> budget dict) and
+    # the on-wire bytes saved vs running the same chosen schedules
+    # uncompressed (summed over every communicator replica)
+    error_budget: Union[float, Dict[str, float]] = 0.0
+    wire_bytes_saved: float = 0.0
 
     @property
     def comm_fraction(self) -> float:
@@ -70,6 +81,15 @@ class CodesignReport:
         for c in self.choices:
             hist = out.setdefault(c.primitive, {})
             hist[c.algorithm] = hist.get(c.algorithm, 0) + 1
+        return out
+
+    def codecs_by_primitive(self) -> Dict[str, Dict[str, int]]:
+        """primitive -> {codec or 'none': task count} histogram."""
+        out: Dict[str, Dict[str, int]] = {}
+        for c in self.choices:
+            hist = out.setdefault(c.primitive, {})
+            key = c.codec or "none"
+            hist[key] = hist.get(key, 0) + 1
         return out
 
 
@@ -116,7 +136,9 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                    allow: Optional[Tuple[str, ...]] = None,
                    force: Optional[Dict[str, str]] = None,
                    hotspot_k: int = 8,
-                   switch_capacity: Optional[int] = None) -> CodesignReport:
+                   switch_capacity: Optional[int] = None,
+                   error_budget: Union[float, Dict[str, float]] = 0.0
+                   ) -> CodesignReport:
     """Run one training iteration through the full co-design pipeline.
 
     ``placement``: a strategy name (packed/strided) or a pre-built
@@ -126,7 +148,12 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
     ``{"all_reduce": "ring"}`` to measure what topology-blind flat-ring
     selection costs).  ``allow``: whitelist forwarded to selection.
     ``switch_capacity``: per-switch in-network aggregation budget for the
-    ``atp`` candidate (None = unlimited; see ``sched.atp``)."""
+    ``atp`` candidate (None = unlimited; see ``sched.atp``).
+    ``error_budget``: relative-error tolerance that admits compressed
+    candidates (``repro.compress``) into selection — a float for every
+    task, or a primitive -> budget dict (e.g. ``{"all_reduce": 0.01}`` to
+    quantize gradient syncs while keeping activation collectives exact).
+    Default 0 = lossless only."""
     pl = placement if isinstance(placement, Placement) else \
         place_mesh(mesh, topo, strategy=placement)
     model, model_name = _resolve_cost_model(cost_model, topo,
@@ -139,6 +166,11 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
     demand = build_demand(cfg, shape, mesh, dp_params)
     placed = pl.place_demand(demand)
 
+    def budget_of(primitive: str) -> float:
+        if isinstance(error_budget, dict):
+            return error_budget.get(primitive, 0.0)
+        return error_budget
+
     # Per-task selection, memoized on the selection key — a 40-layer demand
     # repeats a handful of unique (primitive, size, group) combinations.
     sel_memo: Dict[Tuple, Selection] = {}
@@ -149,11 +181,14 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
         if sel is None:
             forced = force.get(task.primitive) if force else None
             task_allow = (forced,) if forced else allow
-            sel = select_for_task(task, model, allow=task_allow)
+            sel = select_for_task(task, model, allow=task_allow,
+                                  error_budget=budget_of(task.primitive))
             sel_memo[key] = sel
+        _, codec = split_algorithm(sel.algorithm)
         choices[task.task_id] = TaskChoice(
             task.task_id, task.primitive, task.size_bytes, task.group,
-            sel.algorithm, sel.cost, sel.costs)
+            sel.algorithm, sel.cost, sel.costs, codec=codec,
+            wire_ratio=codec_spec(codec).wire_ratio if codec else 1.0)
 
     def comm_cost(task):
         c = choices[task.task_id]
@@ -175,8 +210,10 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
 
     util: Dict[Tuple, float] = {}
     fs_memo: Dict[Tuple, object] = {}
+    bytes_saved = 0.0
     for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
-        algo = choices[ptask.task_id].algorithm
+        choice = choices[ptask.task_id]
+        algo = choice.algorithm
         for r in range(replicas_of(ltask)):
             group = ptask.group if r == 0 else \
                 pl.place_group(ltask.group, ltask.axis, replica=r)
@@ -193,9 +230,14 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                     continue
                 fs_memo[key] = fs
             agg = aggregation_switches(topo, group, agg_capacity) \
-                if algo == "atp" else None
+                if base_algorithm(algo) == "atp" else None
             for link, nbytes in link_utilization(topo, fs, agg).items():
                 util[link] = util.get(link, 0.0) + nbytes
+            if choice.codec:
+                # vs the same schedule uncompressed (the wire-byte win the
+                # compression layer hands the network layer)
+                bytes_saved += fs.bytes_on_wire() \
+                    * (1.0 / choice.wire_ratio - 1.0)
     hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:hotspot_k]
 
     return CodesignReport(
@@ -203,4 +245,5 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
         compute_time=sim.compute_time, comm_time=sim.comm_time,
         policy=policy, cost_model=model_name, placement=pl,
         choices=[choices[t.task_id] for t in placed.comm_tasks],
-        link_hotspots=hotspots, sim=sim)
+        link_hotspots=hotspots, sim=sim,
+        error_budget=error_budget, wire_bytes_saved=bytes_saved)

@@ -1,0 +1,25 @@
+"""Gradient-compression subsystem (paper Sec. II-A lever 3; Shi/Tang
+quantitative surveys).
+
+``codec``      the layer interface: static :class:`CodecSpec` pricing
+               contracts, the executable :class:`Codec` API with generic
+               error feedback, the registry, and the ``"algo+codec"``
+               naming convention compressed collective candidates use.
+``quant``      int8/int4 uniform quantization with stochastic rounding.
+``topk``       magnitude sparsification with error-feedback residual.
+``lowrank``    PowerSGD-style rank-r factorization.
+
+Vertical integration: ``ccl.primitives.compressed_ring_all_reduce``
+executes a quantized ring on real devices; ``ccl.algorithms`` registers
+compressed flow-schedule candidates (``ring+q8``, ``ps+topk``, ...);
+``ccl.cost`` / ``ccl.select`` price wire-byte savings against
+encode/decode overhead; ``codesign.plan_iteration(error_budget=...)``
+lets selection pick compression per CommTask and reports bytes saved.
+"""
+from repro.compress.codec import (Codec, CodecSpec, Encoded,  # noqa: F401
+                                  SPECS, base_algorithm, codec_spec,
+                                  get_codec, register_codec,
+                                  split_algorithm)
+from repro.compress.lowrank import LowRankCodec  # noqa: F401
+from repro.compress.quant import QuantCodec  # noqa: F401
+from repro.compress.topk import TopKCodec  # noqa: F401

@@ -1,0 +1,58 @@
+"""PowerSGD-style low-rank gradient codec with error feedback.
+
+One subspace iteration: P = orth(M @ Q0), Q = M^T @ P, wire = (P, Q)
+— ``(m + n) * r`` words against ``m * n``.  The projection matmuls are
+the ``repro.kernels.compress`` matmul primitive; Q0 is a fixed
+pseudo-random test matrix (deterministic per shape, so every rank in a
+collective projects into the same subspace and partial sums stay
+consistent — PowerSGD's linearity property).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.codec import Codec, CodecSpec, Encoded, codec_spec
+from repro.kernels.compress.ref import matmul_ref
+
+
+def _matrix_shape(shape: Tuple[int, ...]) -> Tuple[int, int]:
+    """View any payload as a near-square matrix (static, trace-safe)."""
+    n = math.prod(shape)
+    if len(shape) >= 2:
+        m = shape[0]
+        return m, n // m
+    # best divisor <= sqrt(n); prime payloads degrade to a single row
+    best = 1
+    d = 1
+    while d * d <= n:
+        if n % d == 0:
+            best = d
+        d += 1
+    return best, n // best
+
+
+class LowRankCodec(Codec):
+    def __init__(self, rank: int = 4, spec: Optional[CodecSpec] = None):
+        if rank < 1:
+            raise ValueError(f"rank must be >= 1, got {rank}")
+        self.rank = rank
+        self.spec = spec or codec_spec("lowrank")
+
+    def _encode(self, x, key=None) -> Encoded:
+        m, n = _matrix_shape(x.shape)
+        mat = x.reshape(m, n).astype(jnp.float32)
+        r = min(self.rank, m, n)
+        q0 = jax.random.normal(jax.random.PRNGKey(r + n % 9973), (n, r))
+        p = matmul_ref(mat, q0)             # (m, r)
+        p, _ = jnp.linalg.qr(p)             # orthonormal columns
+        q = matmul_ref(mat.T, p)            # (n, r)
+        wire = (m + n) * r * 4
+        return Encoded(self.spec.name, x.shape, x.dtype, (p, q), wire)
+
+    def decode(self, enc: Encoded):
+        p, q = enc.arrays
+        return matmul_ref(p, q.T).reshape(enc.shape)

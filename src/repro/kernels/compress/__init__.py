@@ -1,0 +1,4 @@
+"""Gradient-compression kernels: Pallas quantize/dequantize/sparsify/matmul
+with pure-JAX references (see ``repro.compress`` for the codec layer)."""
+from repro.kernels.compress.ops import (dequantize, lowrank_project,  # noqa: F401
+                                        quantize, sparsify)

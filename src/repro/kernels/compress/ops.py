@@ -1,0 +1,92 @@
+"""Jitted public wrappers for the compression kernels.
+
+Payloads of any shape are flattened to a (rows, row_len) layout with
+per-row scales/thresholds — the layout both the Pallas kernels and the
+references share.  ``interpret=True`` (the default everywhere in this
+repo) runs the same kernels through the Pallas interpreter on CPU.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.compress.kernel import (dequantize_kernel, matmul_kernel,
+                                           quantize_kernel, sparsify_kernel)
+from repro.kernels.compress.ref import (dequantize_ref, matmul_ref,
+                                        quantize_ref, sparsify_ref)
+
+
+def _as_rows(x: jax.Array, row_len: int = 256) -> Tuple[jax.Array, int]:
+    """Flatten + zero-pad to (rows, row_len); returns (rows2d, orig_size)."""
+    flat = x.reshape(-1)
+    n = flat.size
+    pad = (-n) % row_len
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, row_len), n
+
+
+def _row_block(rows: int, want: int = 8) -> int:
+    """Largest divisor of ``rows`` that is <= ``want`` (the kernels require
+    the grid to tile the row count exactly)."""
+    for bm in range(min(want, rows), 0, -1):
+        if rows % bm == 0:
+            return bm
+    return 1
+
+
+def quantize(x: jax.Array, *, bits: int = 8, stochastic: bool = False,
+             key: Optional[jax.Array] = None, row_len: int = 256,
+             interpret: bool = True
+             ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Quantize any-shape ``x`` -> (q int8 (rows, row_len), scales (rows, 1),
+    original shape).  Stochastic rounding draws its bits from ``key``."""
+    rows, _ = _as_rows(x, row_len)
+    rand = None
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding needs a PRNG key")
+        rand = jax.random.bits(key, rows.shape, jnp.uint32)
+    q, scales = quantize_kernel(rows, rand, bits=bits, stochastic=stochastic,
+                                bm=_row_block(rows.shape[0]),
+                                interpret=interpret)
+    return q, scales, x.shape
+
+
+def dequantize(q: jax.Array, scales: jax.Array, shape: Tuple[int, ...],
+               dtype=jnp.float32, *, interpret: bool = True) -> jax.Array:
+    out = dequantize_kernel(q, scales, bm=_row_block(q.shape[0]),
+                            interpret=interpret)
+    n = math.prod(shape)
+    return out.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def sparsify(x: jax.Array, thresh: jax.Array, *, row_len: int = 256,
+             interpret: bool = True) -> jax.Array:
+    """Zero entries of ``x`` below the (scalar) magnitude threshold."""
+    rows, n = _as_rows(x, row_len)
+    t = jnp.broadcast_to(jnp.asarray(thresh, jnp.float32),
+                         (rows.shape[0], 1))
+    out = sparsify_kernel(rows, t, bm=_row_block(rows.shape[0]),
+                          interpret=interpret)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def lowrank_project(m: jax.Array, q: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """PowerSGD projection P = M @ Q (and, transposed, Q' = M^T @ P) with
+    fp32 accumulation; block sizes snap to divisors of the operand dims."""
+    return matmul_kernel(m, q, bm=_row_block(m.shape[0], 128),
+                         bn=_row_block(q.shape[1], 128),
+                         interpret=interpret)
+
+
+reference = {
+    "quantize": quantize_ref,
+    "dequantize": dequantize_ref,
+    "sparsify": sparsify_ref,
+    "matmul": matmul_ref,
+}

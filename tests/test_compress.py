@@ -1,0 +1,449 @@
+"""Gradient-compression subsystem: codec round trips, Pallas kernel vs
+reference parity, the error-feedback property, compressed-candidate pricing,
+error-budget selection, and the end-to-end codesign integration."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.ccl.algorithms import (ALGORITHMS, COMPRESSED_CANDIDATES,
+                                  generate_flows)
+from repro.ccl.cost import CostParams, algo_cost
+from repro.ccl.select import (AlphaBeta, FlowSim, select_for_task,
+                              structurally_eligible)
+from repro.compress import (SPECS, base_algorithm, codec_spec, get_codec,
+                            split_algorithm)
+from repro.core.demand import CommTask
+from repro.core.demand_builder import DemandParams
+from repro.core.types import MeshConfig, SHAPES_BY_NAME
+from repro.codesign import JobSpec, plan_cluster, plan_iteration
+from repro.configs import get_config
+from repro.kernels.compress.ops import (dequantize, lowrank_project,
+                                        quantize, sparsify)
+from repro.kernels.compress.ref import (dequantize_ref, matmul_ref,
+                                        quantize_ref, sparsify_ref)
+from repro.net.topology import fat_tree, torus2d
+
+SHAPE = SHAPES_BY_NAME["train_4k"]
+
+
+# ---------------------------------------------------------------------------
+# codec API: round trips, wire accounting, spec consistency
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name,max_err", [
+    ("q8", 0.02), ("q4", 0.25), ("topk", 1.0), ("lowrank", 1.0),
+])
+def test_codec_roundtrip_error_within_spec_regime(name, max_err):
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    codec = get_codec(name)
+    enc, _ = codec.encode(x, codec.init_state(x))
+    dec = codec.decode(enc)
+    assert dec.shape == x.shape
+    rel = float(jnp.linalg.norm(dec - x) / jnp.linalg.norm(x))
+    assert rel <= max_err, (name, rel)
+    assert enc.wire_bytes < x.size * 4
+    # at gradient-like payload sizes the measured wire bytes must be within
+    # 2x of the spec's advertised ratio (specs are nominal constants; the
+    # low-rank ratio is shape-dependent and only amortizes at scale)
+    big = jax.random.normal(jax.random.PRNGKey(1), (512, 512))
+    enc_big, _ = codec.encode(big)
+    assert enc_big.wire_bytes <= \
+        big.size * 4 * codec_spec(name).wire_ratio * 2
+
+
+def test_quantized_codec_decode_is_unbiased_with_stochastic_rounding():
+    from repro.compress import QuantCodec
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (512,))
+    codec = QuantCodec(bits=8, stochastic=True)
+    dec = jnp.mean(jnp.stack([
+        codec.decode(codec.encode(x, key=jax.random.PRNGKey(i))[0])
+        for i in range(200)]), axis=0)
+    det = get_codec("q8").decode(get_codec("q8").encode(x)[0])
+    # the 200-sample mean must beat a single deterministic rounding
+    assert float(jnp.abs(dec - x).max()) < float(jnp.abs(det - x).max())
+    # a stochastic codec refuses to silently degrade to biased rounding
+    with pytest.raises(ValueError):
+        codec.encode(x)
+
+
+def test_q4_payload_is_nibble_packed():
+    """The q4 wire claim must be real: half of q8's payload bytes, and the
+    pack/unpack transform is lossless."""
+    from repro.kernels.compress.ref import pack_int4, unpack_int4
+
+    x = jax.random.normal(jax.random.PRNGKey(9), (1001,))
+    e8, _ = get_codec("q8").encode(x)
+    e4, _ = get_codec("q4").encode(x)
+    assert e4.arrays[0].nbytes == math.ceil(e8.arrays[0].nbytes / 2)
+    assert get_codec("q4").decode(e4).shape == x.shape
+    q = jnp.arange(-7, 8, dtype=jnp.int8)
+    np.testing.assert_array_equal(
+        np.asarray(unpack_int4(pack_int4(q), q.size)), np.asarray(q))
+
+
+def test_topk_codec_keeps_largest_magnitudes():
+    # distinct magnitudes, alternating signs, shuffled deterministically
+    mags = jnp.arange(1.0, 65.0) * jnp.where(jnp.arange(64) % 2 == 0, 1, -1)
+    x = jax.random.permutation(jax.random.PRNGKey(5), mags)
+    codec = get_codec("topk")
+    dec = codec.decode(codec.encode(x)[0])
+    kept = np.nonzero(np.asarray(dec))[0]
+    k = max(1, int(x.size * codec.fraction))
+    assert len(kept) == k
+    top = np.argsort(-np.abs(np.asarray(x)))[:k]
+    assert set(kept) == set(top)
+
+
+def test_lowrank_codec_exact_on_low_rank_input():
+    u = jax.random.normal(jax.random.PRNGKey(2), (40, 3))
+    v = jax.random.normal(jax.random.PRNGKey(3), (3, 30))
+    x = u @ v  # true rank 3 < codec rank 4
+    codec = get_codec("lowrank")
+    dec = codec.decode(codec.encode(x)[0])
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(x), atol=1e-3)
+
+
+def test_specs_effective_error_orders_budgets():
+    # the budget knob's semantics depend on this ordering: q8 admitted at
+    # tight budgets, sparsification/low-rank only at loose ones
+    assert SPECS["q8"].effective_error < SPECS["q4"].effective_error \
+        < SPECS["lowrank"].effective_error
+    for name, spec in SPECS.items():
+        assert 0 < spec.wire_ratio < 1 and spec.passes >= 1, name
+        if spec.error_feedback:
+            assert spec.effective_error == spec.rel_error * 0.5
+
+
+def test_algorithm_name_parsing():
+    assert split_algorithm("ring+q8") == ("ring", "q8")
+    assert split_algorithm("ring") == ("ring", None)
+    assert base_algorithm("ps+topk") == "atp"
+    assert base_algorithm("hierarchical+q8") == "hierarchical"
+    with pytest.raises(KeyError):
+        codec_spec("zstd")
+
+
+# ---------------------------------------------------------------------------
+# error feedback: the residual provably bounds the accumulated bias
+# ---------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 10))
+@settings(max_examples=8, deadline=None)
+def test_error_feedback_bounds_accumulated_bias(seed):
+    """Transmitting the same gradient T times: without error feedback the
+    accumulated bias grows linearly in T; with the residual it converges
+    to a bounded fixed point (the bias at 4T barely exceeds the bias at
+    T).  This is the property that makes a 97%-lossy top-k codec usable
+    for training."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    codec = get_codec("topk")
+    t_short, t_long = 25, 100
+
+    def bias(steps, with_ef):
+        state = codec.init_state(x)
+        acc = jnp.zeros_like(x)
+        for _ in range(steps):
+            enc, new_state = codec.encode(x, state)
+            if with_ef:
+                state = new_state  # else: drop the residual every step
+            acc = acc + codec.decode(enc)
+        return float(jnp.linalg.norm(acc - steps * x))
+
+    ef_s, ef_l = bias(t_short, True), bias(t_long, True)
+    raw_s, raw_l = bias(t_short, False), bias(t_long, False)
+    assert raw_l == pytest.approx(raw_s * t_long / t_short, rel=1e-3)
+    assert ef_l < raw_l / 2          # EF strictly shrinks the bias
+    assert ef_l < ef_s * 1.5         # ...and it has stopped growing
+
+
+def test_error_feedback_residual_equals_accumulated_bias():
+    """The invariant behind the bound: after any number of steps the
+    carried residual IS exactly the total un-transmitted mass."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (128,))
+    codec = get_codec("lowrank")
+    state = codec.init_state(x)
+    acc = jnp.zeros_like(x)
+    for _ in range(5):
+        enc, state = codec.encode(x, state)
+        acc = acc + codec.decode(enc)
+    np.testing.assert_allclose(np.asarray(5 * x - acc),
+                               np.asarray(state.reshape(x.shape)),
+                               atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs references (interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+@pytest.mark.parametrize("shape", [(256,), (8, 256), (3, 100)])
+def test_quantize_kernel_matches_ref(bits, shape):
+    x = jax.random.normal(jax.random.PRNGKey(1), shape)
+    q, scales, orig = quantize(x, bits=bits)
+    dec = dequantize(q, scales, orig)
+    rows, _ = q.shape
+    x_rows = jnp.pad(x.reshape(-1), (0, q.size - x.size)).reshape(rows, -1)
+    q_ref, s_ref = quantize_ref(x_rows, bits=bits, per_row=True)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+    np.testing.assert_allclose(np.asarray(scales), np.asarray(s_ref),
+                               rtol=1e-6)
+    dec_ref = dequantize_ref(q_ref, s_ref).reshape(-1)[:x.size].reshape(shape)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(dec_ref),
+                               rtol=1e-6)
+    qmax = 2 ** (bits - 1) - 1
+    assert float(jnp.abs(dec - x).max()) <= float(jnp.abs(x).max()) / qmax
+
+
+def test_quantize_kernel_stochastic_is_unbiased():
+    # values that do NOT land on integer steps after absmax scaling
+    x = jnp.linspace(-0.9994, 1.0, 256)
+    decs = []
+    for i in range(300):
+        q, s, shape = quantize(x, stochastic=True, key=jax.random.PRNGKey(i))
+        decs.append(dequantize(q, s, shape))
+    mean = jnp.mean(jnp.stack(decs), axis=0)
+    det = dequantize(*quantize(x))
+    assert float(jnp.abs(mean - x).max()) < float(jnp.abs(det - x).max())
+
+
+def test_sparsify_kernel_matches_ref():
+    x = jax.random.normal(jax.random.PRNGKey(2), (512,))
+    thresh = float(jnp.quantile(jnp.abs(x), 0.9))
+    out = sparsify(x, thresh)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(sparsify_ref(x, thresh)))
+    assert 0 < int((out != 0).sum()) < x.size
+
+
+def test_lowrank_matmul_kernel_matches_ref():
+    m = jax.random.normal(jax.random.PRNGKey(3), (128, 64))
+    q = jax.random.normal(jax.random.PRNGKey(4), (64, 4))
+    np.testing.assert_allclose(np.asarray(lowrank_project(m, q)),
+                               np.asarray(matmul_ref(m, q)),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# compressed candidates: flow schedules + pricing
+# ---------------------------------------------------------------------------
+
+
+def test_compressed_flowset_scales_wire_bytes():
+    task = CommTask("t", "all_reduce", 1024 * 8, tuple(range(8)))
+    base = generate_flows(task, "ring")
+    comp = generate_flows(task, "ring+q8")
+    assert comp.algorithm == "ring+q8"
+    assert comp.num_steps == base.num_steps
+    assert len(comp.flows) == len(base.flows)
+    ratio = codec_spec("q8").wire_ratio
+    assert comp.bytes_on_wire() == pytest.approx(
+        base.bytes_on_wire() * ratio, rel=0.01)
+    # ad hoc composition beyond the canonical registry also works
+    adhoc = generate_flows(task, "ring+q4")
+    assert adhoc.bytes_on_wire() < comp.bytes_on_wire()
+
+
+def test_ps_topk_uses_atp_flow_pattern():
+    task = CommTask("t", "all_reduce", 2 ** 20, tuple(range(8)))
+    ps = generate_flows(task, "ps+topk")
+    atp = generate_flows(task, "atp")
+    assert ps.num_steps == atp.num_steps == 2
+    assert len(ps.flows) == len(atp.flows)
+    assert ps.bytes_on_wire() < atp.bytes_on_wire()
+
+
+def test_compressed_candidates_registered_and_guarded():
+    for name in COMPRESSED_CANDIDATES:
+        assert name in ALGORITHMS["all_reduce"]
+    # structural guards come from the base algorithm
+    assert structurally_eligible("ring+q8", 6)
+    assert not structurally_eligible("halving_doubling+q8", 6)
+
+
+def test_algo_cost_compressed_decomposition():
+    """cost(compressed) = latency + ratio * bandwidth + codec overhead."""
+    cp = CostParams(alpha=1e-6, link_bw=10e9, codec_bw=200e9,
+                    codec_alpha=2e-6)
+    n, p = 64 * 2 ** 20, 8
+    full = algo_cost("all_reduce", "ring", n, p, cp)
+    lat = algo_cost("all_reduce", "ring", 0, p, cp)
+    spec = codec_spec("q8")
+    steps = 2 * (p - 1)
+    want = lat + (full - lat) * spec.wire_ratio \
+        + steps * cp.codec_alpha + spec.passes * n / cp.codec_bw
+    got = algo_cost("all_reduce", "ring+q8", n, p, cp)
+    assert got == pytest.approx(want, rel=1e-9)
+    # bandwidth regime: compression wins; latency regime: overhead loses
+    assert got < full
+    small = 2 ** 10
+    assert algo_cost("all_reduce", "ring+q8", small, p, cp) > \
+        algo_cost("all_reduce", "ring", small, p, cp)
+    # the per-step codec launch latency is charged even when the fabric
+    # alpha is 0 (steps cannot be inferred from a zero latency term)
+    cp0 = CostParams(alpha=0.0, link_bw=10e9, codec_alpha=2e-6)
+    assert algo_cost("all_reduce", "ring+q8", small, p, cp0) > \
+        algo_cost("all_reduce", "ring", small, p, cp0) + \
+        2 * (p - 1) * cp0.codec_alpha * 0.99
+
+
+def test_flowsim_prices_codec_overhead():
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    task = CommTask("t", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    free = FlowSim(topo, codec_bw=1e30, codec_alpha=0.0)
+    priced = FlowSim(topo)
+    assert priced.cost(task, "ring+q8") > free.cost(task, "ring+q8")
+    assert free.cost(task, "ring+q8") < free.cost(task, "ring")
+
+
+# ---------------------------------------------------------------------------
+# error-budget selection
+# ---------------------------------------------------------------------------
+
+
+def test_default_budget_excludes_all_lossy_candidates():
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    task = CommTask("g", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    for model in (AlphaBeta.from_topology(topo), FlowSim(topo)):
+        sel = select_for_task(task, model)
+        assert "+" not in sel.algorithm
+        assert all("+" not in a for a in sel.costs)
+        assert any("+" in a for a in sel.excluded)
+
+
+def test_budget_admits_codecs_by_effective_error():
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    task = CommTask("g", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    model = FlowSim(topo)
+    tight = select_for_task(task, model, error_budget=0.01)
+    loose = select_for_task(task, model, error_budget=0.5)
+    assert "ring+q8" in tight.costs and "ring+topk" not in tight.costs
+    assert "ring+topk" in loose.costs
+    # a budget below every codec's error behaves like the default
+    none = select_for_task(task, model, error_budget=1e-6)
+    assert all("+" not in a for a in none.costs)
+
+
+def test_explicit_force_bypasses_budget_but_whitelist_does_not():
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    task = CommTask("g", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    # a single-name force is an explicit accuracy decision
+    sel = select_for_task(task, FlowSim(topo), allow=("ring+q8",))
+    assert sel.algorithm == "ring+q8"
+    # a generic whitelist must still respect the (default 0) budget
+    sel = select_for_task(task, FlowSim(topo), allow=("ring", "ring+q8"))
+    assert sel.algorithm == "ring" and "ring+q8" in sel.excluded
+    # ad hoc base+codec combos beyond the canonical registry are forceable
+    # (the executable ring_q4 has a priceable selection counterpart)
+    sel = select_for_task(task, FlowSim(topo), allow=("ring+q4",))
+    assert sel.algorithm == "ring+q4"
+    assert sel.cost < select_for_task(
+        task, FlowSim(topo), allow=("ring+q8",)).cost
+
+
+def test_compression_rejected_in_latency_regime():
+    """Tiny payloads: the wire saving is negligible but the per-step codec
+    latency is not — selection must keep the uncompressed candidate."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    task = CommTask("g", "all_reduce", 2 ** 10, tuple(topo.accelerators))
+    for model in (AlphaBeta.from_topology(topo), FlowSim(topo)):
+        sel = select_for_task(task, model, error_budget=0.5)
+        assert "+" not in sel.algorithm, (type(model).__name__,
+                                          sel.algorithm)
+
+
+def test_compressed_hierarchical_inherits_host_guard():
+    # single-host-per-gpu fat-tree cannot run hierarchical, compressed or not
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=4.0)
+    task = CommTask("g", "all_reduce", 64 * 2 ** 20,
+                    tuple(topo.accelerators))
+    sel = select_for_task(task, FlowSim(topo), error_budget=0.01)
+    assert "hierarchical+q8" in sel.excluded
+    # ICI fabrics exclude the ps/atp-based compressed candidates too
+    ici = torus2d(4, 4)
+    t2 = CommTask("g", "all_reduce", 64 * 2 ** 20, tuple(ici.accelerators))
+    sel2 = select_for_task(t2, FlowSim(ici), error_budget=0.5)
+    assert "ps+topk" in sel2.excluded
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: plan_iteration / plan_cluster with a budget
+# ---------------------------------------------------------------------------
+
+
+def _grad_mesh(p):
+    return MeshConfig(shape=(p,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+
+
+def test_plan_iteration_budget_lowers_jct_and_reports_savings():
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    cfg = get_config("qwen2-0.5b")
+    dpp = DemandParams(zero1=False)
+    base = plan_iteration(cfg, SHAPE, _grad_mesh(8), topo, policy="serial",
+                          dp_params=dpp)
+    comp = plan_iteration(cfg, SHAPE, _grad_mesh(8), topo, policy="serial",
+                          dp_params=dpp, error_budget=0.01)
+    assert comp.jct < base.jct
+    assert comp.wire_bytes_saved > 0 and base.wire_bytes_saved == 0
+    assert comp.error_budget == 0.01
+    compressed = [c for c in comp.choices if c.codec]
+    assert compressed and all(c.codec == "q8" for c in compressed)
+    assert all(0 < c.wire_ratio < 1 for c in compressed)
+    assert "q8" in comp.codecs_by_primitive()["all_reduce"]
+
+
+def test_plan_iteration_per_primitive_budget():
+    """The dict form compresses gradients while keeping other primitives
+    exact — the per-CommTask knob."""
+    topo = fat_tree(num_hosts=8, gpus_per_host=1, oversub=8.0)
+    cfg = get_config("qwen2-0.5b")
+    rep = plan_iteration(cfg, SHAPE, _grad_mesh(8), topo, policy="serial",
+                         dp_params=DemandParams(zero1=False),
+                         error_budget={"all_reduce": 0.01})
+    assert any(c.codec for c in rep.choices
+               if c.primitive == "all_reduce")
+    assert all(c.codec is None for c in rep.choices
+               if c.primitive != "all_reduce")
+    # the report records the dict verbatim, not a collapsed global number
+    assert rep.error_budget == {"all_reduce": 0.01}
+
+
+def test_plan_cluster_compression_shrinks_contended_bytes():
+    """Horizontal integration: compressed tenants put fewer bytes on the
+    shared uplinks, so contention (and the stagger problem) shrinks."""
+    topo = fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=2,
+                    nic_bw=2e9, agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    mesh = MeshConfig(shape=(4,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    cfg = get_config("qwen2-0.5b")
+    dpp = DemandParams(zero1=False)
+
+    def jobs(budget):
+        return [JobSpec("jobA", cfg, SHAPE, mesh,
+                        devices=topo.hosts[0] + topo.hosts[2],
+                        dp_params=dpp, error_budget=budget),
+                JobSpec("jobB", cfg, SHAPE, mesh,
+                        devices=topo.hosts[1] + topo.hosts[3],
+                        dp_params=dpp, error_budget=budget)]
+
+    base = plan_cluster(jobs(0.0), topo, grid=4)
+    comp = plan_cluster(jobs(0.01), topo, grid=4)
+    assert base.contended and comp.contended
+    total = lambda rep: sum(b for users in rep.contended.values()
+                            for b in users.values())
+    assert total(comp) < total(base)
+    for name in ("jobA", "jobB"):
+        assert comp.solo_jct[name] < base.solo_jct[name]

@@ -59,3 +59,17 @@ def test_bench_atp_candidate_number_holds():
     assert derived > 1.0
     assert details["selected"] == "atp"
     assert details["capped_selected"] != "atp"
+
+
+def test_bench_compression_candidate_number_holds():
+    """The compression benchmark: a 1% error budget wins the bandwidth-
+    regime gradient sync on the oversubscribed fat-tree, rejects
+    compression in the latency regime, and strictly lowers e2e JCT."""
+    from benchmarks.paper_claims import bench_compression_candidate
+    derived, details = bench_compression_candidate()
+    assert derived > 1.5  # compressed vs best lossless candidate
+    assert details["selected_64MiB"].endswith("+q8")
+    assert "+" not in details["latency_regime_pick"]
+    assert details["e2e_jct_s"]["budget_1pct"] < \
+        details["e2e_jct_s"]["lossless"]
+    assert details["wire_GiB_saved"] > 0
