@@ -1,19 +1,23 @@
 """The paper-specific walkthrough: one training job through all five layers
 of the communication-optimization paradigm (Fig. 5a), wired together by the
-``repro.codesign`` engine:
+``repro.codesign`` engine behind its declarative ``CodesignProblem`` API:
 
   1. Para.   — pick an architecture + mesh; emit its CommDemand
-  2. Codesign (vertical) — placement onto a physical topology + per-task
-     algorithm selection priced on that topology + JCT scheduling, via
-     ``codesign.plan_iteration``
-  3. CCL     — the selection crossover in detail: closed-form AlphaBeta vs
+  2. Codesign (vertical) — a ``CodesignProblem`` pinned knob by knob:
+     placement onto a physical topology + per-task algorithm selection
+     priced on that topology + JCT scheduling, via ``codesign.plan``
+  3. Plan-space search — ``placement=Search()``: the optimizer walks
+     packed/balanced/strided/permuted candidates + swap refinement and
+     attributes the JCT win per knob
+  4. CCL     — the selection crossover in detail: closed-form AlphaBeta vs
      topology-priced FlowSim, + TACCL-style synthesis
-  4. Flow sched. (horizontal) — two jobs sharing links, CASSINI staggering
-  5. Net.    — the same collective on torus vs oversubscribed fat-tree
+  5. Flow sched. (horizontal) — two jobs sharing links, CASSINI staggering
+  6. Net.    — the same collective on torus vs oversubscribed fat-tree
 
     PYTHONPATH=src python examples/comm_codesign.py --arch dbrx-132b
 """
 import argparse
+import json
 import os
 import sys
 
@@ -21,7 +25,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.ccl.select import AlphaBeta, FlowSim, select_for_task
 from repro.ccl.synth import Sketch, synthesize
-from repro.codesign import JobSpec, plan_cluster, plan_iteration
+from repro.codesign import (CodesignProblem, JobSpec, PlanSpace, Search,
+                            plan, plan_cluster, plan_iteration, search)
 from repro.configs import ARCHS, get_config
 from repro.core.demand import CommTask
 from repro.core.demand_builder import (DemandParams, build_demand,
@@ -57,11 +62,13 @@ def main():
     print("[2] Codesign engine: demand -> placement -> selection -> JCT")
     topo = dgx_cluster(2)
     print(f"    mesh {DP2_TP8.shape} (data x model) on {topo.name}")
+    # the declarative surface: one problem, knobs pinned per variant
+    problem = CodesignProblem(cfg, shape, DP2_TP8, topo)
     for pol in ("serial", "fifo", "priority", "preempt"):
-        r = plan_iteration(cfg, shape, DP2_TP8, topo, policy=pol)
+        r = plan(problem.pinned(policy=pol))
         print(f"    {pol:9s} JCT={r.jct:7.3f}s exposed={r.exposed_comm:6.3f}s"
               f" ({100*r.comm_fraction:4.1f}%)")
-    rep = plan_iteration(cfg, shape, DP2_TP8, topo, policy="priority")
+    rep = plan(problem.pinned(policy="priority"))
     print("    per-primitive algorithm choices (FlowSim on the topology):")
     for prim, hist in sorted(rep.algorithms_by_primitive().items()):
         pick = ", ".join(f"{a} x{k}" for a, k in sorted(hist.items()))
@@ -69,15 +76,15 @@ def main():
     print("    hottest links (bytes over one iteration):")
     for (u, v), nbytes in rep.link_hotspots[:4]:
         print(f"      {u!s:>7s} -> {v!s:<7s} {nbytes/2**30:8.2f} GiB")
-    strided = plan_iteration(cfg, shape, DP2_TP8, topo, policy="serial",
-                             placement="strided")
-    packed = plan_iteration(cfg, shape, DP2_TP8, topo, policy="serial")
+    strided = plan(problem.pinned(policy="serial", placement="strided"))
+    packed = plan(problem.pinned(policy="serial"))
     print(f"    placement: packed comm {packed.comm_time:.3f}s vs strided "
           f"{strided.comm_time:.3f}s "
           f"({strided.comm_time/max(packed.comm_time, 1e-12):.2f}x worse)")
     dp16 = MeshConfig(shape=(16,), axis_names=("data",),
                       data_axes=("data",), model_axes=())
     dpp = DemandParams(zero1=False)
+    # plan_iteration is now a thin kwarg adapter over the same engine
     auto = plan_iteration(cfg, shape, dp16, topo, policy="serial",
                           dp_params=dpp)
     ring = plan_iteration(cfg, shape, dp16, topo, policy="serial",
@@ -111,7 +118,37 @@ def main():
           f"({', '.join(sorted(base.algorithms_by_primitive().get('all_reduce', {})))})")
 
     print("=" * 72)
-    print("[3] CCL: algorithm selection per payload, AlphaBeta vs FlowSim")
+    print("[3] Plan-space search: placement=Search() on an oversubscribed "
+          "fat-tree")
+    # TP-12 over 8-GPU hosts: packed straddles a host boundary 8+4, an
+    # uneven partition the hierarchical all-reduce cannot use (canonical
+    # copy: benchmarks.paper_claims.bench_placement_search, asserted in CI)
+    stopo = fat_tree(num_hosts=4, gpus_per_host=8, hosts_per_rack=1,
+                     oversub=8.0, pcie_bw=128e9)
+    smesh = MeshConfig(shape=(2, 12), axis_names=("data", "model"))
+    sproblem = CodesignProblem(get_config("qwen2-0.5b"), shape, smesh, stopo,
+                               space=PlanSpace(placement=Search()))
+    sres = search(sproblem, budget=12)
+    spacked = plan(sproblem.pinned(placement="packed"))
+    print(f"    explored {sres.evaluated} candidates "
+          f"(budget {sres.budget}); frontier:")
+    for cand in sres.frontier[:4]:
+        p = cand.assignment["placement"]
+        label = p.strategy if hasattr(p, "strategy") else p
+        print(f"      {label:16s} JCT {cand.jct:7.3f}s")
+    print(f"    best {sres.best.placement.strategy!r} "
+          f"JCT {sres.best.jct:.3f}s vs packed {spacked.jct:.3f}s "
+          f"({spacked.jct / sres.best.jct:.2f}x): balanced 6+6 host split "
+          f"re-enables hierarchical where packed's 8+4 straddle cannot")
+    print("    per-knob attribution of the win:")
+    for knob, saved in sres.attribution.items():
+        print(f"      {knob:12s} saves {saved:7.3f}s of JCT vs its baseline")
+    blob = json.dumps(sres.best.to_dict())
+    print(f"    winning plan serializes to JSON "
+          f"({len(blob)} bytes via CodesignReport.to_dict)")
+
+    print("=" * 72)
+    print("[4] CCL: algorithm selection per payload, AlphaBeta vs FlowSim")
     ab = AlphaBeta.from_topology(topo)
     fsim = FlowSim(topo)
     group = tuple(topo.accelerators)
@@ -130,7 +167,7 @@ def main():
           f"({ring_t/syn.makespan:.2f}x)")
 
     print("=" * 72)
-    print("[4] Flow scheduler (horizontal): two jobs on one link (CASSINI)")
+    print("[5] Flow scheduler (horizontal): two jobs on one link (CASSINI)")
     jobs = [JobProfile("jobA", 0.012, 0.008), JobProfile("jobB", 0.010, 0.010)]
     phases, base, best = stagger_jobs(jobs, grid=6)
     for j in jobs:
@@ -150,8 +187,10 @@ def main():
     crep = plan_cluster(
         [JobSpec("tenantA", small, shape, dp4,
                  devices=ctopo.hosts[0] + ctopo.hosts[2], dp_params=dpp),
-         JobSpec("tenantB", small, shape, dp4,
-                 devices=ctopo.hosts[1] + ctopo.hosts[3], dp_params=dpp)],
+         # a JobSpec can carry a full CodesignProblem instead of flat knobs
+         JobSpec("tenantB", devices=ctopo.hosts[1] + ctopo.hosts[3],
+                 problem=CodesignProblem(small, shape, dp4, ctopo,
+                                         dp_params=dpp))],
         ctopo, grid=6)
     print(f"    two DP-4 tenants straddling both racks of {ctopo.name}: "
           f"{len(crep.contended)} contended links")
@@ -168,7 +207,7 @@ def main():
           f"({crep.stagger_speedup:.3f}x recovered)")
 
     print("=" * 72)
-    print("[5] Network: same ring all-reduce, different fabrics")
+    print("[6] Network: same ring all-reduce, different fabrics")
     n = 256
     t = CommTask("ar", "all_reduce", 256 * 2 ** 20, tuple(range(n)))
     fs = generate_flows(t, "ring")

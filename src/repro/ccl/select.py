@@ -42,6 +42,7 @@ from repro.ccl.cost import CostParams, algo_cost
 from repro.compress.codec import (SPECS, base_algorithm, codec_spec,
                                   split_algorithm)
 from repro.core.demand import CommTask, FlowSet
+from repro.core.knobs import Choice, Fixed, Knob, Search
 from repro.net.simulate import simulate_flowset
 from repro.net.topology import Topology
 from repro.sched.atp import aggregation_switches
@@ -286,34 +287,65 @@ class Selection:
     excluded: List[str] = field(default_factory=list)
 
 
+def constraint_from_allow(allow: Optional[Tuple[str, ...]]) -> Knob:
+    """The legacy ``allow`` tuple as a knob: None (or empty, which always
+    behaved like None) opens the full registry, a single name is a force
+    (``Fixed``), several names a whitelist."""
+    if not allow:
+        return Search()
+    if len(allow) == 1:
+        return Fixed(allow[0])
+    return Choice(*allow)
+
+
 def select_for_task(task: CommTask, model: CostModel,
                     allow: Optional[Tuple[str, ...]] = None,
-                    error_budget: float = 0.0) -> Selection:
+                    error_budget: float = 0.0,
+                    constraint: Optional[Knob] = None) -> Selection:
     """Pick the cheapest eligible algorithm for ``task`` under ``model``.
+
+    ``constraint`` is the plan-space knob for this task's primitive
+    (``repro.core.knobs``): ``Search()`` opens every registered candidate
+    (the default), ``Choice(...)`` whitelists, and ``Fixed(name)`` forces
+    one algorithm.  The legacy ``allow`` tuple is accepted as shorthand
+    and normalized via :func:`constraint_from_allow` (None -> Search,
+    one name -> Fixed, several -> Choice); passing both is an error.
 
     ``error_budget`` gates compressed candidates: a ``"<base>+<codec>"``
     name competes only if the codec's effective relative error (see
     ``CodecSpec.effective_error``) fits the budget.  The default budget of
     0 excludes all lossy candidates — exactness is opt-in per task.  Only
-    a single-name ``allow`` (a force, e.g. the driver's ``force=`` path)
+    a ``Fixed`` constraint (a force, e.g. the driver's ``force=`` path)
     bypasses the budget — forcing one compressed algorithm is an explicit
-    accuracy decision; a generic whitelist still respects the budget."""
+    accuracy decision; a ``Choice`` whitelist still respects the budget."""
+    if constraint is None:
+        constraint = constraint_from_allow(allow)
+    elif allow is not None:
+        raise ValueError("pass either allow= or constraint=, not both")
+    forced = isinstance(constraint, Fixed)
+    allowed: Optional[Tuple[str, ...]] = None
+    if forced:
+        allowed = (constraint.value,)
+    elif isinstance(constraint, Choice):
+        allowed = constraint.options
+    elif not isinstance(constraint, Search):
+        raise TypeError(f"constraint must be a Fixed/Choice/Search knob, "
+                        f"got {constraint!r}")
     p = len(task.group)
-    forced = allow is not None and len(allow) == 1
     costs: Dict[str, float] = {}
     excluded: List[str] = []
     names = list(ALGORITHMS[task.primitive])
-    if allow:
+    if allowed:
         # ad hoc "<base>+<codec>" combos beyond the canonical registry are
         # explicitly allowable (generate_flows/algo_cost compose them)
-        for name in allow:
+        for name in allowed:
             if name not in names and "+" in name:
                 base, codec = split_algorithm(name)
                 if base_algorithm(name) in ALGORITHMS[task.primitive] \
                         and codec in SPECS:
                     names.append(name)
     for name in names:
-        if allow and name not in allow:
+        if allowed and name not in allowed:
             continue
         _, codec = split_algorithm(name)
         if codec is not None and not forced and \
@@ -329,7 +361,7 @@ def select_for_task(task: CommTask, model: CostModel,
         raise ValueError(
             f"no eligible algorithm for primitive {task.primitive!r} with "
             f"group size p={p}: registered="
-            f"{list(ALGORITHMS[task.primitive])}, allow={allow}, "
+            f"{list(ALGORITHMS[task.primitive])}, allow={allowed}, "
             f"excluded by eligibility guards={excluded}")
     best = min(costs, key=costs.get)
     return Selection(best, costs[best], costs, excluded)

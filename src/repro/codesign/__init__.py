@@ -4,7 +4,19 @@ The survey's central observation is that the three layers of the training
 communication stack — parallelization strategy, collective communication
 library, and network — are "relatively independent", and that *vertical
 co-design* across them is the open opportunity.  This package wires them
-together:
+together behind one declarative surface:
+
+``api``
+    :class:`CodesignProblem` = model/shape/mesh/topology plus a
+    :class:`PlanSpace` of typed knobs (``repro.core.knobs``): placement,
+    per-primitive algorithm, codec error budget, scheduling policy,
+    switch capacity — each ``Fixed(v)``, ``Choice(...)`` or
+    ``Search()``.  ``plan(problem)`` prices one fully pinned point of
+    the space into a :class:`CodesignReport`; ``search(problem,
+    budget=N)`` walks the free knobs with one shared memoized cost model
+    and returns a :class:`SearchResult` (best plan, explored frontier,
+    per-knob attribution of the win).  Both reports serialize to JSON
+    (``to_dict``/``from_dict``) so plans can be persisted.
 
 ``placement``
     Maps logical mesh coordinates (``core.types.MeshConfig``) onto the
@@ -23,19 +35,27 @@ together:
       group spans, and ``replica=`` selects which concrete communicator
       stands in for it.
 
+``placement_search``
+    The ROADMAP's TopoOpt-style optimizer behind ``placement=Search()``:
+    deterministic heuristic candidates (packed, host-balanced, strided,
+    axis permutations) plus a hot-spot-guided swap-neighborhood hill
+    climb.  The host-balanced family is the headline: where ``packed``
+    straddles a host boundary unevenly (TP-12 over 8-GPU hosts = 8+4),
+    the even split restores the equal-size partition the hierarchical
+    decomposition needs, and search finds it.
+
 ``driver``
-    ``plan_iteration(cfg, shape, mesh, topo, policy)`` runs demand ->
-    placement -> per-task algorithm selection (via ``ccl.select``'s
-    CostModel protocol: closed-form ``AlphaBeta`` or topology-priced
-    ``FlowSim``) -> ``sched.simulate_iteration``, and returns a
-    ``CodesignReport`` with JCT, exposed communication, per-task algorithm
-    choices and per-link hot spots.
+    The legacy keyword surface: ``plan_iteration(cfg, shape, mesh, topo,
+    ...)`` is an exact kwarg-for-kwarg adapter over
+    ``plan(CodesignProblem.from_kwargs(...))``.
 
 ``cluster``
     The "Horizontal" arrow: ``plan_cluster(jobs, topo)`` runs every
-    tenant's ``plan_iteration``, asks the network layer which links carry
-    >= 2 jobs' traffic, compresses each job into a ``sched.flows``
-    ``JobProfile`` and CASSINI-staggers their iteration phases, returning a
+    tenant's pinned problem (``JobSpec`` either carries a
+    ``CodesignProblem`` or the legacy flat fields) through ``plan``,
+    asks the network layer which links carry >= 2 jobs' traffic,
+    compresses each job into a ``sched.flows`` ``JobProfile`` and
+    CASSINI-staggers their iteration phases, returning a
     ``ClusterReport`` (naive vs. staggered per-job JCT, contended links,
     chosen phases).
 
@@ -44,17 +64,24 @@ together:
 switch-memory fallback) and both cost models price the ``atp`` all-reduce
 against ``hierarchical`` and friends on switched topologies.
 
-So is gradient compression (``repro.compress``):
-``plan_iteration(error_budget=...)`` admits lossy candidates
-(``ring+q8``, ``ps+topk``, ...) into per-task selection — a float for
-every task or a primitive -> budget dict — and the ``CodesignReport``
-surfaces the chosen codecs (``codecs_by_primitive``) and the on-wire
-bytes saved (``wire_bytes_saved``).  ``JobSpec.error_budget`` carries the
-same knob through ``plan_cluster``, where smaller per-tenant flows shrink
-what the horizontal layer must stagger.
+So is gradient compression (``repro.compress``): an ``error_budget``
+knob admits lossy candidates (``ring+q8``, ``ps+topk``, ...) into
+per-task selection — a float for every task or a primitive -> budget
+dict — and the ``CodesignReport`` surfaces the chosen codecs
+(``codecs_by_primitive``) and the on-wire bytes saved
+(``wire_bytes_saved``).  ``JobSpec`` carries the same knob through
+``plan_cluster``, where smaller per-tenant flows shrink what the
+horizontal layer must stagger.
 """
+from repro.core.knobs import Choice, Fixed, Knob, Search  # noqa: F401
+
 from repro.codesign.placement import Placement, place_mesh  # noqa: F401
-from repro.codesign.driver import (CodesignReport, TaskChoice,  # noqa: F401
-                                   plan_iteration)
+from repro.codesign.report import CodesignReport, TaskChoice  # noqa: F401
+from repro.codesign.api import (Candidate, CodesignProblem,  # noqa: F401
+                                Objective, PlanSpace, SearchResult,
+                                plan, search)
+from repro.codesign.placement_search import (  # noqa: F401
+    balanced_placement, heuristic_placements, swap_neighbors)
+from repro.codesign.driver import plan_iteration  # noqa: F401
 from repro.codesign.cluster import (ClusterReport, JobPlan,  # noqa: F401
                                     JobSpec, plan_cluster)

@@ -1,0 +1,625 @@
+"""Declarative co-design problems over one searchable plan space.
+
+Three PRs of cross-layer knobs (placement, per-primitive algorithm,
+codec/error budget, scheduling policy, switch capacity) grew into an
+11-parameter keyword pile on ``plan_iteration``.  The paper's Sec. IV-A
+point is that these are *one* joint design space to be searched, not a
+flat argument list — so this module makes the space first-class:
+
+``CodesignProblem``
+    model/shape/mesh/topology plus a :class:`PlanSpace` of typed knobs
+    (``repro.core.knobs``): each knob is ``Fixed(v)`` (pinned),
+    ``Choice(...)`` (finite candidates) or ``Search()`` (candidates come
+    from an optimizer).  An :class:`Objective` says what to minimize and
+    what constrains feasibility.
+
+``plan(problem)``
+    all scalar knobs pinned -> one :class:`CodesignReport` (exactly the
+    legacy ``plan_iteration`` behaviour; that function is now a thin
+    kwarg adapter over this).
+
+``search(problem, budget=N)``
+    walks the free knobs — enumerating ``Choice`` options, generating
+    placement candidates via ``codesign.placement_search`` (heuristics +
+    a hot-spot-guided swap-neighborhood hill climb) for
+    ``placement=Search()`` — pricing every candidate with one shared
+    memoized cost model, and returns a :class:`SearchResult`: the best
+    plan, the explored frontier, and a per-knob attribution of the win.
+
+Per-primitive ``algorithm`` knobs are *constraints*, not enumeration
+axes: the CCL selection layer is already a search over algorithms priced
+by the same cost model, so ``Fixed`` forces, ``Choice`` whitelists and
+``Search`` opens the registry (``ccl.select.select_for_task`` reads the
+knob directly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Tuple, Union
+
+from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
+                              constraint_from_allow, flows_on_topology,
+                              select_for_task)
+from repro.compress.codec import base_algorithm, codec_spec, split_algorithm
+from repro.core.demand_builder import DemandParams, build_demand
+from repro.core.knobs import Choice, Fixed, Knob, Search, as_knob, is_free
+from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
+from repro.net.simulate import link_utilization
+from repro.net.topology import Topology
+from repro.sched.atp import aggregation_switches
+from repro.sched.tasks import Policy, simulate_iteration
+
+from repro.codesign.placement import Placement, place_mesh
+from repro.codesign.report import (CodesignReport, TaskChoice,
+                                   _placement_from_dict, _placement_to_dict)
+
+# the scalar knobs plan() needs pinned and search() may enumerate
+# (per-primitive algorithm knobs are selection constraints instead)
+SCALAR_KNOBS = ("placement", "policy", "error_budget", "switch_capacity")
+
+
+@dataclass(frozen=True)
+class PlanSpace:
+    """The typed cross-layer design space of one job.
+
+    ``algorithm`` maps a primitive (``"all_reduce"``, ...) to its knob;
+    the ``"*"`` key applies to unlisted primitives.  ``Fixed(name)``
+    forces (bypassing the error-budget gate, like the legacy single-name
+    ``allow``), ``Choice(...)`` whitelists, ``Search()``/absent opens
+    the full registry.  ``error_budget`` values may be a float or a
+    primitive -> budget dict (the legacy shapes, verbatim)."""
+
+    placement: Knob = Fixed("packed")
+    algorithm: Mapping[str, Knob] = field(default_factory=dict)
+    error_budget: Knob = Fixed(0.0)
+    policy: Knob = Fixed("priority")
+    switch_capacity: Knob = Fixed(None)
+
+    def scalar_knobs(self) -> Dict[str, Knob]:
+        return {name: getattr(self, name) for name in SCALAR_KNOBS}
+
+    def free_knobs(self) -> Dict[str, Knob]:
+        """The knobs ``search()`` walks (Fixed ones are pinned)."""
+        return {n: k for n, k in self.scalar_knobs().items() if is_free(k)}
+
+    def constraint_for(self, primitive: str) -> Optional[Knob]:
+        """The algorithm knob the selection layer sees for ``primitive``."""
+        knob = self.algorithm.get(primitive)
+        return knob if knob is not None else self.algorithm.get("*")
+
+    def pinned(self, **values) -> "PlanSpace":
+        """A copy with the named scalar knobs replaced: raw values are
+        pinned (wrapped in ``Fixed``), Knob instances are taken as-is —
+        so ``pinned(placement=Search())`` re-opens a knob instead of
+        nesting it inside a Fixed."""
+        for name in values:
+            if name not in SCALAR_KNOBS:
+                raise ValueError(f"unknown scalar knob {name!r} "
+                                 f"(one of {SCALAR_KNOBS})")
+        return dataclasses.replace(
+            self, **{n: as_knob(v) for n, v in values.items()})
+
+
+@dataclass(frozen=True)
+class Objective:
+    """What 'best' means.  ``minimize``/``tie_break`` name report
+    metrics (``wire_bytes_saved`` is bigger-is-better and is negated
+    internally, so naming it always rewards saving more bytes);
+    ``max_worst_link_bytes`` is a feasibility constraint on the hottest
+    link's per-iteration byte load."""
+
+    minimize: str = "jct"
+    tie_break: Tuple[str, ...] = ("exposed_comm", "worst_link_bytes")
+    max_worst_link_bytes: Optional[float] = None
+
+    METRICS = ("jct", "exposed_comm", "comm_time", "compute_time",
+               "worst_link_bytes", "wire_bytes_saved")
+    _MAXIMIZED = ("wire_bytes_saved",)
+
+    def __post_init__(self):
+        for m in (self.minimize, *self.tie_break):
+            if m not in self.METRICS:
+                raise ValueError(f"unknown objective metric {m!r} "
+                                 f"(one of {self.METRICS})")
+
+    def key(self, report: CodesignReport) -> Tuple[float, ...]:
+        """Lexicographic minimization key."""
+        return tuple(-getattr(report, m) if m in self._MAXIMIZED
+                     else getattr(report, m)
+                     for m in (self.minimize, *self.tie_break))
+
+    def feasible(self, report: CodesignReport) -> bool:
+        return (self.max_worst_link_bytes is None
+                or report.worst_link_bytes <= self.max_worst_link_bytes)
+
+
+@dataclass(frozen=True)
+class CodesignProblem:
+    """One job's co-design problem: what to train, where, and which
+    knobs of the cross-layer space are open."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: MeshConfig
+    topo: Topology
+    space: PlanSpace = field(default_factory=PlanSpace)
+    objective: Objective = field(default_factory=Objective)
+    cost_model: Union[str, CostModel] = "flowsim"
+    dp_params: Optional[DemandParams] = None
+    hotspot_k: int = 8
+
+    @classmethod
+    def from_kwargs(cls, cfg: ModelConfig, shape: ShapeConfig,
+                    mesh: MeshConfig, topo: Topology,
+                    policy: Policy = "priority",
+                    placement: Union[str, Placement] = "packed",
+                    cost_model: Union[str, CostModel] = "flowsim",
+                    dp_params: Optional[DemandParams] = None,
+                    allow: Optional[Tuple[str, ...]] = None,
+                    force: Optional[Dict[str, str]] = None,
+                    hotspot_k: int = 8,
+                    switch_capacity: Optional[int] = None,
+                    error_budget: Union[float, Dict[str, float]] = 0.0
+                    ) -> "CodesignProblem":
+        """The legacy ``plan_iteration`` keyword surface as a problem:
+        ``force`` entries become per-primitive ``Fixed`` knobs, ``allow``
+        the ``"*"`` wildcard (one name -> ``Fixed`` = forced, several ->
+        ``Choice`` = whitelist), everything else a pinned scalar knob."""
+        algorithm: Dict[str, Knob] = {}
+        if force:
+            algorithm.update({p: Fixed(a) for p, a in force.items()})
+        if allow:  # empty allow always behaved like None: full registry
+            algorithm["*"] = constraint_from_allow(tuple(allow))
+        space = PlanSpace(
+            placement=Fixed(placement), algorithm=algorithm,
+            error_budget=Fixed(error_budget), policy=Fixed(policy),
+            switch_capacity=Fixed(switch_capacity))
+        return cls(cfg=cfg, shape=shape, mesh=mesh, topo=topo, space=space,
+                   cost_model=cost_model, dp_params=dp_params,
+                   hotspot_k=hotspot_k)
+
+    def pinned(self, **values) -> "CodesignProblem":
+        """A copy with the named scalar knobs pinned (see PlanSpace)."""
+        return dataclasses.replace(self, space=self.space.pinned(**values))
+
+    def is_fully_specified(self) -> bool:
+        return not self.space.free_knobs()
+
+
+# ---------------------------------------------------------------------------
+# Cost-model resolution
+# ---------------------------------------------------------------------------
+
+
+def _model_capacity(model: CostModel) -> Optional[int]:
+    """The in-network aggregation budget a cost model prices ``atp`` with
+    (None = unlimited): FlowSim carries ``switch_capacity``, AlphaBeta
+    ``params.atp_capacity``."""
+    cap = getattr(model, "switch_capacity", None)
+    if cap is None:
+        cap = getattr(getattr(model, "params", None), "atp_capacity", None)
+    return cap
+
+
+def _resolve_cost_model(cost_model: Union[str, CostModel], topo: Topology,
+                        switch_capacity: Optional[int] = None
+                        ) -> Tuple[CostModel, str]:
+    if not isinstance(cost_model, str):
+        if switch_capacity is not None and \
+                _model_capacity(cost_model) != switch_capacity:
+            raise ValueError(
+                "switch_capacity applies to the named cost models "
+                "('flowsim' | 'alphabeta'); a CostModel instance must "
+                "carry its own aggregation budget (e.g. "
+                "FlowSim(topo, switch_capacity=...) or "
+                "CostParams(atp_capacity=...))")
+        return cost_model, type(cost_model).__name__.lower()
+    if cost_model == "flowsim":
+        return FlowSim(topo, switch_capacity=switch_capacity), "flowsim"
+    if cost_model == "alphabeta":
+        ab = AlphaBeta.from_topology(topo)
+        if switch_capacity is not None:
+            ab = dataclasses.replace(ab, params=dataclasses.replace(
+                ab.params, atp_capacity=switch_capacity))
+        return ab, "alphabeta"
+    raise ValueError(f"unknown cost model {cost_model!r} "
+                     f"(flowsim | alphabeta | a CostModel instance)")
+
+
+# ---------------------------------------------------------------------------
+# plan(): all scalar knobs pinned -> one CodesignReport
+# ---------------------------------------------------------------------------
+
+
+def plan(problem: CodesignProblem,
+         _resolved: Optional[Tuple[CostModel, str]] = None
+         ) -> CodesignReport:
+    """Run one training iteration through the full co-design pipeline:
+
+      Para.   build_demand(cfg, shape, mesh)          logical CommDemand
+      Place.  place_mesh(mesh, topo).place_demand()   physical groups
+      CCL     select_for_task(task, CostModel)        per-task algorithm
+      Net.    FlowSim prices candidates on the real topology
+      Sched.  simulate_iteration(...)                 JCT + exposed comm
+
+    Every scalar knob of ``problem.space`` must be ``Fixed`` — free
+    knobs are ``search()``'s job.  ``_resolved`` lets the search loop
+    share one memoized cost model across candidates."""
+    space = problem.space
+    free = space.free_knobs()
+    if free:
+        raise ValueError(
+            f"plan() needs every scalar knob Fixed, but "
+            f"{sorted(free)} are free ({free}) — use search(problem) "
+            f"to walk them")
+    topo = problem.topo
+    placement = space.placement.value
+    policy: Policy = space.policy.value
+    error_budget = space.error_budget.value
+    switch_capacity = space.switch_capacity.value
+
+    pl = placement if isinstance(placement, Placement) else \
+        place_mesh(problem.mesh, topo, strategy=placement)
+    model, model_name = _resolved if _resolved is not None else \
+        _resolve_cost_model(problem.cost_model, topo, switch_capacity)
+    # the aggregation budget selection actually priced atp with — an
+    # instance cost model carries its own; the hot-spot map must match it
+    agg_capacity = switch_capacity if switch_capacity is not None \
+        else _model_capacity(model)
+
+    demand = build_demand(problem.cfg, problem.shape, problem.mesh,
+                          problem.dp_params or DemandParams())
+    placed = pl.place_demand(demand)
+
+    def budget_of(primitive: str) -> float:
+        if isinstance(error_budget, dict):
+            return error_budget.get(primitive, 0.0)
+        return error_budget
+
+    # Per-task selection, memoized on the selection key — a 40-layer demand
+    # repeats a handful of unique (primitive, size, group) combinations.
+    sel_memo: Dict[Tuple, Selection] = {}
+    choices: Dict[str, TaskChoice] = {}
+    for task in placed.comm_tasks:
+        key = (task.primitive, task.size_bytes, task.group)
+        sel = sel_memo.get(key)
+        if sel is None:
+            sel = select_for_task(
+                task, model, constraint=space.constraint_for(task.primitive),
+                error_budget=budget_of(task.primitive))
+            sel_memo[key] = sel
+        _, codec = split_algorithm(sel.algorithm)
+        choices[task.task_id] = TaskChoice(
+            task.task_id, task.primitive, task.size_bytes, task.group,
+            sel.algorithm, sel.cost, sel.costs, codec=codec,
+            wire_ratio=codec_spec(codec).wire_ratio if codec else 1.0)
+
+    def comm_cost(task):
+        c = choices[task.task_id]
+        return c.cost_s, c.algorithm
+
+    sim = simulate_iteration(placed, comm_cost, policy)
+
+    # Hot-spot map.  The JCT simulation above prices one *representative*
+    # communicator per task (all replicas along an axis run the same
+    # collective concurrently), but the per-link byte map must cover every
+    # replica or whole hosts would look idle.  Flowsets are memoized on the
+    # same (primitive, algorithm, size, group) key selection dedups on.
+    def replicas_of(task):
+        if task.axis == "model":
+            return len(pl.model_groups())
+        if task.axis == "data":
+            return len(pl.data_groups())
+        return 1
+
+    util: Dict[Tuple, float] = {}
+    fs_memo: Dict[Tuple, object] = {}
+    bytes_saved = 0.0
+    for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
+        choice = choices[ptask.task_id]
+        algo = choice.algorithm
+        for r in range(replicas_of(ltask)):
+            group = ptask.group if r == 0 else \
+                pl.place_group(ltask.group, ltask.axis, replica=r)
+            key = (ltask.primitive, algo, ltask.size_bytes, group)
+            fs = fs_memo.get(key)
+            if fs is None:
+                replica = dataclasses.replace(ptask, group=group)
+                try:
+                    fs = flows_on_topology(topo, replica, algo)
+                except ValueError:
+                    # replica-r's group can be shaped differently from the
+                    # representative's (irregular placement); skip rather
+                    # than mis-attribute its bytes
+                    continue
+                fs_memo[key] = fs
+            agg = aggregation_switches(topo, group, agg_capacity) \
+                if base_algorithm(algo) == "atp" else None
+            for link, nbytes in link_utilization(topo, fs, agg).items():
+                util[link] = util.get(link, 0.0) + nbytes
+            if choice.codec:
+                # vs the same schedule uncompressed (the wire-byte win the
+                # compression layer hands the network layer)
+                bytes_saved += fs.bytes_on_wire() \
+                    * (1.0 / choice.wire_ratio - 1.0)
+    hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:problem.hotspot_k]
+
+    return CodesignReport(
+        jct=sim.jct, exposed_comm=sim.exposed_comm,
+        compute_time=sim.compute_time, comm_time=sim.comm_time,
+        policy=policy, cost_model=model_name, placement=pl,
+        choices=[choices[t.task_id] for t in placed.comm_tasks],
+        link_hotspots=hotspots, sim=sim,
+        error_budget=error_budget, wire_bytes_saved=bytes_saved)
+
+
+# ---------------------------------------------------------------------------
+# search(): walk the free knobs
+# ---------------------------------------------------------------------------
+
+
+def _assignment_value_json(v):
+    """An assignment value in JSON form (placements as device lists)."""
+    if isinstance(v, Placement):
+        return _placement_to_dict(v)
+    return v
+
+
+def _assignment_value_from_json(v):
+    """Inverse of :func:`_assignment_value_json`: serialized placements
+    come back as real Placement objects, so a round-tripped result walks
+    and talks like a live one."""
+    if isinstance(v, dict) and {"devices", "strategy", "mesh"} <= set(v):
+        return _placement_from_dict(v)
+    return v
+
+
+def _assignment_from_json(d: Mapping) -> Dict[str, object]:
+    return {n: _assignment_value_from_json(v) for n, v in d.items()}
+
+
+@dataclass
+class Candidate:
+    """One explored point of the plan space.  Only the search winner
+    keeps its full ``report`` (and live sim trace); runners-up carry the
+    headline metrics and their knob assignment."""
+
+    assignment: Dict[str, object]
+    jct: float
+    exposed_comm: float
+    worst_link_bytes: float
+    feasible: bool
+    report: Optional[CodesignReport] = None
+    key: Optional[Tuple[float, ...]] = None  # objective key, not serialized
+
+    def to_dict(self) -> Dict:
+        return {
+            "assignment": {n: _assignment_value_json(v)
+                           for n, v in self.assignment.items()},
+            "jct": self.jct, "exposed_comm": self.exposed_comm,
+            "worst_link_bytes": self.worst_link_bytes,
+            "feasible": self.feasible,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "Candidate":
+        return cls(assignment=_assignment_from_json(d["assignment"]),
+                   jct=d["jct"], exposed_comm=d["exposed_comm"],
+                   worst_link_bytes=d["worst_link_bytes"],
+                   feasible=d["feasible"], report=None)
+
+
+@dataclass
+class SearchResult:
+    """What ``search()`` hands back: the winning plan, the frontier it
+    explored, and which knob bought how much of the win."""
+
+    best: CodesignReport
+    best_assignment: Dict[str, object]
+    frontier: List[Candidate]
+    # knob -> JCT the best plan saves vs reverting that one knob to its
+    # baseline (Choice: the first option; placement Search: "packed")
+    attribution: Dict[str, float]
+    evaluated: int
+    budget: int
+    truncated: bool = False  # budget ran out before the walk finished
+
+    @property
+    def best_jct(self) -> float:
+        return self.best.jct
+
+    def to_dict(self) -> Dict:
+        return {
+            "best": self.best.to_dict(),
+            "best_assignment": {n: _assignment_value_json(v)
+                                for n, v in self.best_assignment.items()},
+            "frontier": [c.to_dict() for c in self.frontier],
+            "attribution": dict(self.attribution),
+            "evaluated": self.evaluated, "budget": self.budget,
+            "truncated": self.truncated,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "SearchResult":
+        return cls(best=CodesignReport.from_dict(d["best"]),
+                   best_assignment=_assignment_from_json(
+                       d["best_assignment"]),
+                   frontier=[Candidate.from_dict(c) for c in d["frontier"]],
+                   attribution=dict(d["attribution"]),
+                   evaluated=d["evaluated"], budget=d["budget"],
+                   truncated=d["truncated"])
+
+
+def _canon(value) -> Tuple:
+    """Hashable identity of an assignment value (dedup key)."""
+    if isinstance(value, Placement):
+        return ("placement", value.devices)
+    if isinstance(value, dict):
+        return ("dict", tuple(sorted(value.items())))
+    return ("value", value)
+
+
+def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
+    """Walk the free knobs of ``problem.space`` and return the best plan.
+
+    ``Choice`` knobs are enumerated (Cartesian product, declaration
+    order); ``placement=Search()`` additionally pulls heuristic
+    candidates from ``codesign.placement_search`` and, with budget left,
+    refines the incumbent with a hot-spot-guided swap-neighborhood hill
+    climb.  Every candidate is priced by ``plan()`` through one shared
+    cost model per switch-capacity value, so FlowSim memoization spans
+    the whole walk.  ``budget`` caps the number of full plan
+    evaluations; per-knob attribution baselines are priced on top (at
+    most one extra evaluation per free knob).
+
+    Deterministic by construction: no randomness, stable enumeration and
+    neighbor order — the same problem and budget always return the same
+    best plan."""
+    if budget < 1:
+        raise ValueError(f"search budget must be >= 1, got {budget}")
+    from repro.codesign.placement_search import (heuristic_placements,
+                                                 swap_neighbors)
+    space = problem.space
+    free = space.free_knobs()
+
+    # candidate values per enumerable knob, declaration order
+    axes: Dict[str, List] = {}
+    placement_open = False  # Search(): swap-walk refinement after sweep
+    for name, knob in free.items():
+        if isinstance(knob, Choice):
+            axes[name] = list(knob.options)
+        elif name == "placement":  # Search
+            placement_open = True
+            axes[name] = heuristic_placements(problem.mesh, problem.topo,
+                                              seeds=knob.seeds)
+        else:
+            raise ValueError(
+                f"knob {name!r} is Search() but only the placement knob "
+                f"has a candidate generator — use Choice(...) for it")
+    pinned = {name: knob.value
+              for name, knob in space.scalar_knobs().items()
+              if name not in axes}
+
+    # one resolved cost model per switch-capacity value: memoization
+    # spans every candidate priced under the same aggregation budget
+    models: Dict[Tuple, Tuple[CostModel, str]] = {}
+
+    def model_for(cap) -> Tuple[CostModel, str]:
+        key = _canon(cap)
+        if key not in models:
+            models[key] = _resolve_cost_model(problem.cost_model,
+                                              problem.topo, cap)
+        return models[key]
+
+    objective = problem.objective
+    seen: Dict[Tuple, Candidate] = {}
+    order: List[Candidate] = []
+    state = {"evaluated": 0}
+
+    def evaluate(assignment: Dict[str, object],
+                 charge: bool = True) -> Candidate:
+        key = tuple((n, _canon(assignment[n])) for n in sorted(assignment))
+        if key in seen:
+            return seen[key]
+        values = dict(pinned)
+        values.update(assignment)
+        prob = problem.pinned(**values)
+        report = plan(prob, _resolved=model_for(values["switch_capacity"]))
+        cand = Candidate(assignment=dict(assignment), jct=report.jct,
+                         exposed_comm=report.exposed_comm,
+                         worst_link_bytes=report.worst_link_bytes,
+                         feasible=objective.feasible(report), report=report,
+                         key=objective.key(report))
+        seen[key] = cand
+        order.append(cand)
+        if charge:
+            state["evaluated"] += 1
+        return cand
+
+    def better(a: Candidate, b: Optional[Candidate]) -> bool:
+        if b is None:
+            return True
+        if a.feasible != b.feasible:
+            return a.feasible
+        return a.key < b.key
+
+    best: Optional[Candidate] = None
+
+    def consider(cand: Candidate) -> None:
+        """Advance the incumbent; losers drop their full report right
+        away so peak memory stays at one live report, not one per
+        explored candidate."""
+        nonlocal best
+        if better(cand, best):
+            if best is not None:
+                best.report = None
+            best = cand
+        elif cand is not best:
+            cand.report = None
+
+    # --- phase 1: enumerate the Choice/heuristic sweep -------------------
+    names = list(axes)
+    truncated = False
+    if names:
+        for combo in itertools.product(*(axes[n] for n in names)):
+            if state["evaluated"] >= budget:
+                truncated = True
+                break
+            consider(evaluate(dict(zip(names, combo))))
+    else:
+        best = evaluate({})
+
+    # --- phase 2: swap-neighborhood hill climb on the placement ----------
+    if placement_open and best is not None:
+        improved = True
+        while improved:
+            improved = False
+            incumbent = best.assignment["placement"]
+            if not isinstance(incumbent, Placement):
+                incumbent = place_mesh(problem.mesh, problem.topo,
+                                       strategy=incumbent)
+            for nb in swap_neighbors(incumbent, problem.topo,
+                                     report=best.report):
+                if state["evaluated"] >= budget:
+                    truncated = True
+                    break
+                prev = best
+                consider(evaluate({**best.assignment, "placement": nb}))
+                if best is not prev:
+                    improved = True
+                    break
+
+    if best is None or not best.feasible:
+        hint = "" if best is None else \
+            f" (best infeasible plan: worst_link_bytes=" \
+            f"{best.worst_link_bytes:.3g} > " \
+            f"{objective.max_worst_link_bytes:.3g})"
+        raise ValueError(f"search found no feasible plan within "
+                         f"budget={budget}{hint}")
+
+    # --- per-knob attribution: revert one knob to its baseline -----------
+    baselines: Dict[str, object] = {}
+    for name in names:
+        knob = free[name]
+        # Choice: the declared first option; placement Search: the first
+        # heuristic candidate, which heuristic_placements pins to packed
+        baselines[name] = knob.options[0] if isinstance(knob, Choice) \
+            else axes[name][0]
+    attribution: Dict[str, float] = {}
+    for name, base_value in baselines.items():
+        if _canon(best.assignment[name]) == _canon(base_value):
+            attribution[name] = 0.0
+            continue
+        reverted = evaluate({**best.assignment, name: base_value},
+                            charge=False)
+        attribution[name] = reverted.jct - best.jct
+        if reverted is not best:
+            reverted.report = None
+
+    frontier = sorted(order, key=lambda c: (not c.feasible, c.key))
+    return SearchResult(
+        best=best.report, best_assignment=dict(best.assignment),
+        frontier=frontier, attribution=attribution,
+        evaluated=state["evaluated"], budget=budget, truncated=truncated)

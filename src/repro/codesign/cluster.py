@@ -7,9 +7,9 @@ engine and the horizontal flow scheduler:
 
   1. carve the topology's accelerators into per-job partitions (explicit
      ``JobSpec.devices`` or first-fit consecutive blocks);
-  2. run every job through ``plan_iteration`` — placement, per-task
-     algorithm selection priced on the shared topology, JCT — and keep its
-     full per-link byte map;
+  2. run every job's pinned :class:`CodesignProblem` through ``api.plan``
+     — placement, per-task algorithm selection priced on the shared
+     topology, JCT — and keep its full per-link byte map;
   3. ask the network layer which links carry traffic from >= 2 jobs
      (``net.simulate.shared_link_load``);
   4. compress each job into a :class:`sched.flows.JobProfile` (compute
@@ -23,38 +23,102 @@ genuinely multi-tenant answer the engine can hand back up the stack.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.ccl.select import CostModel
 from repro.core.demand_builder import DemandParams
+from repro.core.knobs import Fixed
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import shared_link_load
 from repro.net.topology import Topology
 from repro.sched.flows import JobProfile, stagger_jobs, worst_stretch
 from repro.sched.tasks import Policy
 
-from repro.codesign.driver import CodesignReport, plan_iteration
-from repro.codesign.placement import place_mesh
+from repro.codesign.api import CodesignProblem, plan
+from repro.codesign.placement import Placement, place_mesh
+from repro.codesign.report import CodesignReport
 
 
 @dataclass(frozen=True)
 class JobSpec:
     """One tenant job: what to train, how to shard it, and (optionally)
-    which physical devices it owns."""
+    which physical devices it owns.
+
+    A job is at heart a :class:`CodesignProblem` minus the cluster-level
+    concerns (topology, device carving, switch budget).  Pass either the
+    flat fields (the legacy surface) or ``problem=`` — a problem carries
+    every per-job knob, so mixing it with flat per-job fields is an
+    error; the flat views (``cfg``/``mesh``/``policy``/...) are then
+    filled from it."""
 
     name: str
-    cfg: ModelConfig
-    shape: ShapeConfig
-    mesh: MeshConfig
+    cfg: Optional[ModelConfig] = None
+    shape: Optional[ShapeConfig] = None
+    mesh: Optional[MeshConfig] = None
     devices: Optional[Tuple[int, ...]] = None  # None = first-fit block
     policy: Policy = "priority"
-    dp_params: DemandParams = DemandParams()
+    dp_params: Optional[DemandParams] = None
     force: Optional[Dict[str, str]] = None
     # per-tenant compression tolerance (repro.compress): admits compressed
     # candidates into this job's selection; smaller per-job flows also
     # shrink what the horizontal layer sees on contended links
-    error_budget: float = 0.0
+    error_budget: Union[float, Dict[str, float]] = 0.0
+    problem: Optional[CodesignProblem] = None
+
+    def __post_init__(self):
+        if self.problem is None:
+            if self.cfg is None or self.shape is None or self.mesh is None:
+                raise ValueError(f"job {self.name!r} needs cfg/shape/mesh "
+                                 f"(or a CodesignProblem via problem=)")
+            return
+        if (self.cfg is not None or self.shape is not None
+                or self.mesh is not None or self.policy != "priority"
+                or self.dp_params is not None or self.force is not None
+                or self.error_budget != 0.0):
+            raise ValueError(
+                f"job {self.name!r}: problem= carries the per-job knobs; "
+                f"don't also pass cfg/shape/mesh/policy/dp_params/force/"
+                f"error_budget")
+        sp = self.problem.space
+        for knob_name in ("policy", "error_budget"):
+            if not isinstance(getattr(sp, knob_name), Fixed):
+                raise ValueError(
+                    f"job {self.name!r}: plan_cluster needs fully "
+                    f"specified per-job problems — {knob_name} is "
+                    f"{getattr(sp, knob_name)!r}; run search() per job "
+                    f"first or pin it")
+        object.__setattr__(self, "cfg", self.problem.cfg)
+        object.__setattr__(self, "shape", self.problem.shape)
+        object.__setattr__(self, "mesh", self.problem.mesh)
+        object.__setattr__(self, "policy", sp.policy.value)
+        object.__setattr__(self, "dp_params", self.problem.dp_params)
+        object.__setattr__(self, "error_budget", sp.error_budget.value)
+        forced = {p: k.value for p, k in sp.algorithm.items()
+                  if p != "*" and isinstance(k, Fixed)}
+        object.__setattr__(self, "force", forced or None)
+
+    def to_problem(self, topo: Topology, placement: Placement,
+                   cost_model: Union[str, CostModel],
+                   switch_capacity: Optional[int],
+                   hotspot_k: int) -> CodesignProblem:
+        """This job as a fully pinned problem on the shared cluster:
+        the carved placement and the cluster-level cost model / switch
+        budget override whatever the carried problem held."""
+        if self.problem is not None:
+            space = dataclasses.replace(
+                self.problem.space, placement=Fixed(placement),
+                switch_capacity=Fixed(switch_capacity))
+            return dataclasses.replace(
+                self.problem, topo=topo, space=space,
+                cost_model=cost_model, hotspot_k=hotspot_k)
+        return CodesignProblem.from_kwargs(
+            self.cfg, self.shape, self.mesh, topo, policy=self.policy,
+            placement=placement, cost_model=cost_model,
+            dp_params=self.dp_params, force=self.force,
+            hotspot_k=hotspot_k, switch_capacity=switch_capacity,
+            error_budget=self.error_budget)
 
 
 @dataclass
@@ -178,12 +242,8 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
     plans: List[JobPlan] = []
     for spec, devs in zip(jobs, device_blocks):
         placement = place_mesh(spec.mesh, topo, "custom", custom=devs)
-        report = plan_iteration(
-            spec.cfg, spec.shape, spec.mesh, topo, policy=spec.policy,
-            placement=placement, cost_model=cost_model,
-            dp_params=spec.dp_params, force=spec.force, hotspot_k=n_links,
-            switch_capacity=switch_capacity,
-            error_budget=spec.error_budget)
+        report = plan(spec.to_problem(topo, placement, cost_model,
+                                      switch_capacity, hotspot_k=n_links))
         plans.append(JobPlan(
             spec=spec, devices=devs, report=report,
             profile=_job_profile(spec.name, report),

@@ -1,138 +1,39 @@
-"""End-to-end co-design driver: demand -> placement -> selection -> JCT.
+"""Legacy keyword entry point to the co-design engine.
 
-``plan_iteration`` is the vertical slice through all five layers of the
-paper's paradigm (Fig. 5a) with the cross-layer arrows actually wired:
+``plan_iteration`` was the original vertical slice through all five
+layers of the paper's paradigm (Fig. 5a); the engine itself now lives in
+``codesign.api`` behind the declarative :class:`CodesignProblem` /
+``plan`` / ``search`` surface, and this module is the exact
+kwarg-for-kwarg adapter over it:
 
-  Para.   build_demand(cfg, shape, mesh)          logical CommDemand
-  Place.  place_mesh(mesh, topo).place_demand()   physical device groups
-  CCL     select_for_task(task, CostModel)        per-task algorithm
-  Net.    FlowSim prices candidates on the real topology
-  Sched.  simulate_iteration(...)                 JCT + exposed comm
+  plan_iteration(**kw) == plan(CodesignProblem.from_kwargs(**kw))
 
-The result is a :class:`CodesignReport`: JCT, exposed communication,
-per-task algorithm choices and per-link hot spots — everything the layers
-above and below would need to renegotiate (the paper's Sec. IV-A open
-opportunity).
+Existing callers (tests, benchmarks, ``plan_cluster``) keep working
+unchanged; new code should build a :class:`CodesignProblem` and call
+``plan``/``search`` directly — that is the surface that exposes the
+plan space (placement search, knob whitelists, objectives) this flat
+signature cannot.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple, Union
 
-from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
-                              flows_on_topology, select_for_task)
-from repro.compress.codec import base_algorithm, codec_spec, split_algorithm
-from repro.core.demand_builder import DemandParams, build_demand
+from repro.ccl.select import CostModel
+from repro.core.demand_builder import DemandParams
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
-from repro.net.simulate import link_utilization
 from repro.net.topology import Topology
-from repro.sched.atp import aggregation_switches
-from repro.sched.tasks import Policy, SimResult, simulate_iteration
+from repro.sched.tasks import Policy
 
-from repro.codesign.placement import Placement, place_mesh
-
-
-@dataclass
-class TaskChoice:
-    """One comm task's resolved placement + algorithm selection."""
-
-    task_id: str
-    primitive: str
-    size_bytes: int
-    group: Tuple[int, ...]
-    algorithm: str
-    cost_s: float
-    costs: Dict[str, float] = field(default_factory=dict)
-    # compression (repro.compress): the codec riding on the algorithm
-    # (None = uncompressed) and its wire-byte ratio
-    codec: Optional[str] = None
-    wire_ratio: float = 1.0
-
-
-@dataclass
-class CodesignReport:
-    """What the co-design pipeline hands back up the stack."""
-
-    jct: float
-    exposed_comm: float
-    compute_time: float
-    comm_time: float
-    policy: str
-    cost_model: str
-    placement: Placement
-    choices: List[TaskChoice] = field(default_factory=list)
-    link_hotspots: List[Tuple[Tuple, float]] = field(default_factory=list)
-    sim: Optional[SimResult] = None
-    # compression accounting: the error budget selection ran under
-    # (verbatim — a float, or the caller's primitive -> budget dict) and
-    # the on-wire bytes saved vs running the same chosen schedules
-    # uncompressed (summed over every communicator replica)
-    error_budget: Union[float, Dict[str, float]] = 0.0
-    wire_bytes_saved: float = 0.0
-
-    @property
-    def comm_fraction(self) -> float:
-        return self.exposed_comm / self.jct if self.jct else 0.0
-
-    def algorithms_by_primitive(self) -> Dict[str, Dict[str, int]]:
-        """primitive -> {algorithm: task count} histogram."""
-        out: Dict[str, Dict[str, int]] = {}
-        for c in self.choices:
-            hist = out.setdefault(c.primitive, {})
-            hist[c.algorithm] = hist.get(c.algorithm, 0) + 1
-        return out
-
-    def codecs_by_primitive(self) -> Dict[str, Dict[str, int]]:
-        """primitive -> {codec or 'none': task count} histogram."""
-        out: Dict[str, Dict[str, int]] = {}
-        for c in self.choices:
-            hist = out.setdefault(c.primitive, {})
-            key = c.codec or "none"
-            hist[key] = hist.get(key, 0) + 1
-        return out
-
-
-def _model_capacity(model: CostModel) -> Optional[int]:
-    """The in-network aggregation budget a cost model prices ``atp`` with
-    (None = unlimited): FlowSim carries ``switch_capacity``, AlphaBeta
-    ``params.atp_capacity``."""
-    cap = getattr(model, "switch_capacity", None)
-    if cap is None:
-        cap = getattr(getattr(model, "params", None), "atp_capacity", None)
-    return cap
-
-
-def _resolve_cost_model(cost_model: Union[str, CostModel], topo: Topology,
-                        switch_capacity: Optional[int] = None
-                        ) -> Tuple[CostModel, str]:
-    if not isinstance(cost_model, str):
-        if switch_capacity is not None and \
-                _model_capacity(cost_model) != switch_capacity:
-            raise ValueError(
-                "switch_capacity applies to the named cost models "
-                "('flowsim' | 'alphabeta'); a CostModel instance must "
-                "carry its own aggregation budget (e.g. "
-                "FlowSim(topo, switch_capacity=...) or "
-                "CostParams(atp_capacity=...))")
-        return cost_model, type(cost_model).__name__.lower()
-    if cost_model == "flowsim":
-        return FlowSim(topo, switch_capacity=switch_capacity), "flowsim"
-    if cost_model == "alphabeta":
-        ab = AlphaBeta.from_topology(topo)
-        if switch_capacity is not None:
-            ab = dataclasses.replace(ab, params=dataclasses.replace(
-                ab.params, atp_capacity=switch_capacity))
-        return ab, "alphabeta"
-    raise ValueError(f"unknown cost model {cost_model!r} "
-                     f"(flowsim | alphabeta | a CostModel instance)")
+from repro.codesign.api import CodesignProblem, plan
+from repro.codesign.placement import Placement
+from repro.codesign.report import CodesignReport, TaskChoice  # noqa: F401
 
 
 def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                    topo: Topology, policy: Policy = "priority",
                    placement: Union[str, Placement] = "packed",
                    cost_model: Union[str, CostModel] = "flowsim",
-                   dp_params: DemandParams = DemandParams(),
+                   dp_params: Optional[DemandParams] = None,
                    allow: Optional[Tuple[str, ...]] = None,
                    force: Optional[Dict[str, str]] = None,
                    hotspot_k: int = 8,
@@ -147,103 +48,16 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
     CostModel.  ``force``: primitive -> algorithm overrides (e.g.
     ``{"all_reduce": "ring"}`` to measure what topology-blind flat-ring
     selection costs).  ``allow``: whitelist forwarded to selection.
-    ``switch_capacity``: per-switch in-network aggregation budget for the
-    ``atp`` candidate (None = unlimited; see ``sched.atp``).
-    ``error_budget``: relative-error tolerance that admits compressed
-    candidates (``repro.compress``) into selection — a float for every
-    task, or a primitive -> budget dict (e.g. ``{"all_reduce": 0.01}`` to
-    quantize gradient syncs while keeping activation collectives exact).
-    Default 0 = lossless only."""
-    pl = placement if isinstance(placement, Placement) else \
-        place_mesh(mesh, topo, strategy=placement)
-    model, model_name = _resolve_cost_model(cost_model, topo,
-                                            switch_capacity)
-    # the aggregation budget selection actually priced atp with — an
-    # instance cost model carries its own; the hot-spot map must match it
-    agg_capacity = switch_capacity if switch_capacity is not None \
-        else _model_capacity(model)
-
-    demand = build_demand(cfg, shape, mesh, dp_params)
-    placed = pl.place_demand(demand)
-
-    def budget_of(primitive: str) -> float:
-        if isinstance(error_budget, dict):
-            return error_budget.get(primitive, 0.0)
-        return error_budget
-
-    # Per-task selection, memoized on the selection key — a 40-layer demand
-    # repeats a handful of unique (primitive, size, group) combinations.
-    sel_memo: Dict[Tuple, Selection] = {}
-    choices: Dict[str, TaskChoice] = {}
-    for task in placed.comm_tasks:
-        key = (task.primitive, task.size_bytes, task.group)
-        sel = sel_memo.get(key)
-        if sel is None:
-            forced = force.get(task.primitive) if force else None
-            task_allow = (forced,) if forced else allow
-            sel = select_for_task(task, model, allow=task_allow,
-                                  error_budget=budget_of(task.primitive))
-            sel_memo[key] = sel
-        _, codec = split_algorithm(sel.algorithm)
-        choices[task.task_id] = TaskChoice(
-            task.task_id, task.primitive, task.size_bytes, task.group,
-            sel.algorithm, sel.cost, sel.costs, codec=codec,
-            wire_ratio=codec_spec(codec).wire_ratio if codec else 1.0)
-
-    def comm_cost(task):
-        c = choices[task.task_id]
-        return c.cost_s, c.algorithm
-
-    sim = simulate_iteration(placed, comm_cost, policy)
-
-    # Hot-spot map.  The JCT simulation above prices one *representative*
-    # communicator per task (all replicas along an axis run the same
-    # collective concurrently), but the per-link byte map must cover every
-    # replica or whole hosts would look idle.  Flowsets are memoized on the
-    # same (primitive, algorithm, size, group) key selection dedups on.
-    def replicas_of(task):
-        if task.axis == "model":
-            return len(pl.model_groups())
-        if task.axis == "data":
-            return len(pl.data_groups())
-        return 1
-
-    util: Dict[Tuple, float] = {}
-    fs_memo: Dict[Tuple, object] = {}
-    bytes_saved = 0.0
-    for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
-        choice = choices[ptask.task_id]
-        algo = choice.algorithm
-        for r in range(replicas_of(ltask)):
-            group = ptask.group if r == 0 else \
-                pl.place_group(ltask.group, ltask.axis, replica=r)
-            key = (ltask.primitive, algo, ltask.size_bytes, group)
-            fs = fs_memo.get(key)
-            if fs is None:
-                replica = dataclasses.replace(ptask, group=group)
-                try:
-                    fs = flows_on_topology(topo, replica, algo)
-                except ValueError:
-                    # replica-r's group can be shaped differently from the
-                    # representative's (irregular placement); skip rather
-                    # than mis-attribute its bytes
-                    continue
-                fs_memo[key] = fs
-            agg = aggregation_switches(topo, group, agg_capacity) \
-                if base_algorithm(algo) == "atp" else None
-            for link, nbytes in link_utilization(topo, fs, agg).items():
-                util[link] = util.get(link, 0.0) + nbytes
-            if choice.codec:
-                # vs the same schedule uncompressed (the wire-byte win the
-                # compression layer hands the network layer)
-                bytes_saved += fs.bytes_on_wire() \
-                    * (1.0 / choice.wire_ratio - 1.0)
-    hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:hotspot_k]
-
-    return CodesignReport(
-        jct=sim.jct, exposed_comm=sim.exposed_comm,
-        compute_time=sim.compute_time, comm_time=sim.comm_time,
-        policy=policy, cost_model=model_name, placement=pl,
-        choices=[choices[t.task_id] for t in placed.comm_tasks],
-        link_hotspots=hotspots, sim=sim,
-        error_budget=error_budget, wire_bytes_saved=bytes_saved)
+    ``dp_params``: demand-shaping knobs (None = ``DemandParams()``,
+    constructed per call).  ``switch_capacity``: per-switch in-network
+    aggregation budget for the ``atp`` candidate (None = unlimited; see
+    ``sched.atp``).  ``error_budget``: relative-error tolerance that
+    admits compressed candidates (``repro.compress``) into selection — a
+    float for every task, or a primitive -> budget dict (e.g.
+    ``{"all_reduce": 0.01}`` to quantize gradient syncs while keeping
+    activation collectives exact).  Default 0 = lossless only."""
+    return plan(CodesignProblem.from_kwargs(
+        cfg, shape, mesh, topo, policy=policy, placement=placement,
+        cost_model=cost_model, dp_params=dp_params, allow=allow,
+        force=force, hotspot_k=hotspot_k, switch_capacity=switch_capacity,
+        error_budget=error_budget))

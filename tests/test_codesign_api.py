@@ -1,0 +1,465 @@
+"""Declarative CodesignProblem API: typed knobs, plan()/search(), the
+plan_iteration/plan_cluster adapters, placement search, and JSON
+round-trips (ISSUE 4)."""
+import dataclasses
+import inspect
+import json
+import os
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# the canonical placement-search scenario lives next to the benchmark
+# harness so CI smoke assertions, recorded numbers and this suite agree
+from benchmarks.paper_claims import _placement_search_problem
+
+from repro.ccl.select import FlowSim, select_for_task
+from repro.codesign import (Candidate, Choice, CodesignProblem, CodesignReport,
+                            Fixed, JobSpec, Objective, Placement, PlanSpace,
+                            Search, SearchResult, balanced_placement,
+                            heuristic_placements, plan, plan_cluster,
+                            plan_iteration, search, swap_neighbors)
+from repro.codesign.placement_search import axis_permuted_placement
+from repro.configs import get_config
+from repro.core.demand import CommTask
+from repro.core.demand_builder import DemandParams
+from repro.core.types import MeshConfig, SHAPES_BY_NAME
+from repro.net.topology import dgx_cluster, fat_tree
+
+SHAPE = SHAPES_BY_NAME["train_4k"]
+DP2_TP8 = MeshConfig(shape=(2, 8), axis_names=("data", "model"))
+DP16 = MeshConfig(shape=(16,), axis_names=("data",), data_axes=("data",),
+                  model_axes=())
+CFG = get_config("qwen2-0.5b")
+
+
+# ---------------------------------------------------------------------------
+# knob types
+# ---------------------------------------------------------------------------
+
+
+def test_knob_types_basics():
+    assert Fixed(3) == Fixed(3) and Fixed(3) != Fixed(4)
+    # equal knobs must hash equal even for dict values (insertion order)
+    a = Fixed({"all_reduce": 0.01, "all_gather": 0.02})
+    b = Fixed({"all_gather": 0.02, "all_reduce": 0.01})
+    assert a == b and hash(a) == hash(b)
+    assert Choice("a", "b").options == ("a", "b")
+    assert Choice("a", "b") == Choice("a", "b") != Choice("b", "a")
+    assert Search() == Search() and Search(seeds=("x",)) != Search()
+    with pytest.raises(ValueError):
+        Choice()
+    with pytest.raises(AttributeError):
+        Fixed(1).value = 2
+    space = PlanSpace(placement=Choice("packed", "strided"))
+    assert list(space.free_knobs()) == ["placement"]
+    assert PlanSpace().free_knobs() == {}
+    with pytest.raises(ValueError):
+        PlanSpace().pinned(nonsense=1)
+    # pinned() takes Knob instances as-is (re-opening a knob), so a free
+    # knob fails fast in plan() with the use-search() message instead of
+    # surfacing as Fixed(Search()) deep inside placement resolution
+    reopened = PlanSpace().pinned(placement=Search())
+    assert list(reopened.free_knobs()) == ["placement"]
+    assert PlanSpace().pinned(placement="strided").placement == \
+        Fixed("strided")
+
+
+def test_plan_requires_every_scalar_knob_fixed():
+    topo = dgx_cluster(2)
+    problem = CodesignProblem(CFG, SHAPE, DP2_TP8, topo,
+                              space=PlanSpace(policy=Choice("serial",
+                                                            "priority")))
+    assert not problem.is_fully_specified()
+    with pytest.raises(ValueError, match="search"):
+        plan(problem)
+    assert problem.pinned(policy="serial").is_fully_specified()
+
+
+def test_objective_validation_and_key():
+    with pytest.raises(ValueError):
+        Objective(minimize="latency")
+    topo = dgx_cluster(2)
+    rep = plan(CodesignProblem(CFG, SHAPE, DP2_TP8, topo))
+    obj = Objective()
+    assert obj.key(rep) == (rep.jct, rep.exposed_comm, rep.worst_link_bytes)
+    assert obj.feasible(rep)
+    tight = Objective(max_worst_link_bytes=1.0)
+    assert not tight.feasible(rep)
+    # wire_bytes_saved is bigger-is-better: the minimization key negates
+    # it so naming it always rewards saving more bytes
+    saver = Objective(minimize="jct", tie_break=("wire_bytes_saved",))
+    assert saver.key(rep) == (rep.jct, -rep.wire_bytes_saved)
+
+
+# ---------------------------------------------------------------------------
+# adapter equivalence: plan_iteration(**kw) == plan(from_kwargs(**kw))
+# ---------------------------------------------------------------------------
+
+
+def _reports_equal(a, b):
+    assert a.jct == b.jct and a.comm_time == b.comm_time
+    assert a.exposed_comm == b.exposed_comm
+    assert a.policy == b.policy and a.cost_model == b.cost_model
+    assert a.placement.devices == b.placement.devices
+    assert [(c.task_id, c.algorithm, c.cost_s, c.codec) for c in a.choices] \
+        == [(c.task_id, c.algorithm, c.cost_s, c.codec) for c in b.choices]
+    assert a.link_hotspots == b.link_hotspots
+    assert a.error_budget == b.error_budget
+    assert a.wire_bytes_saved == b.wire_bytes_saved
+
+
+@settings(max_examples=10)
+@given(policy=st.sampled_from(["serial", "priority"]),
+       placement=st.sampled_from(["packed", "strided"]),
+       cost_model=st.sampled_from(["flowsim", "alphabeta"]),
+       error_budget=st.sampled_from([0.0, 0.01]),
+       force_ring=st.booleans(),
+       zero1=st.booleans())
+def test_plan_iteration_is_an_exact_adapter(policy, placement, cost_model,
+                                            error_budget, force_ring, zero1):
+    """Property: for sampled kwarg combinations the legacy entry point and
+    the declarative problem produce identical reports."""
+    topo = dgx_cluster(2)
+    kw = dict(policy=policy, placement=placement, cost_model=cost_model,
+              dp_params=DemandParams(zero1=zero1),
+              force={"all_reduce": "ring"} if force_ring else None,
+              error_budget=error_budget)
+    legacy = plan_iteration(CFG, SHAPE, DP2_TP8, topo, **kw)
+    declarative = plan(CodesignProblem.from_kwargs(CFG, SHAPE, DP2_TP8,
+                                                   topo, **kw))
+    _reports_equal(legacy, declarative)
+
+
+def test_from_kwargs_allow_maps_to_wildcard_knob():
+    """A multi-name allow is a Choice whitelist; a single name is a Fixed
+    force — both must reproduce the legacy selection results."""
+    topo = dgx_cluster(2)
+    for allow in (("ring", "tree"), ("ring",)):
+        legacy = plan_iteration(CFG, SHAPE, DP16, topo, allow=allow,
+                                dp_params=DemandParams(zero1=False))
+        prob = CodesignProblem.from_kwargs(
+            CFG, SHAPE, DP16, topo, allow=allow,
+            dp_params=DemandParams(zero1=False))
+        knob = prob.space.algorithm["*"]
+        assert isinstance(knob, Fixed if len(allow) == 1 else Choice)
+        _reports_equal(legacy, plan(prob))
+
+
+def test_empty_allow_still_means_full_registry():
+    """Legacy edge: allow=() always behaved like allow=None — the adapter
+    must not turn it into an empty (invalid) whitelist."""
+    topo = dgx_cluster(2)
+    _reports_equal(plan_iteration(CFG, SHAPE, DP2_TP8, topo, allow=()),
+                   plan_iteration(CFG, SHAPE, DP2_TP8, topo))
+    prob = CodesignProblem.from_kwargs(CFG, SHAPE, DP2_TP8, topo, allow=())
+    assert "*" not in prob.space.algorithm
+
+
+def test_plan_iteration_mutable_default_fixed():
+    """The shared-instance hazard: dp_params must default to None (fresh
+    DemandParams constructed inside), not a module-level instance."""
+    for fn, param in ((plan_iteration, "dp_params"),
+                      (CodesignProblem.from_kwargs, "dp_params")):
+        assert inspect.signature(fn).parameters[param].default is None
+    assert JobSpec.__dataclass_fields__["dp_params"].default is None
+    # None behaves exactly like an explicit default DemandParams()
+    topo = dgx_cluster(2)
+    _reports_equal(plan_iteration(CFG, SHAPE, DP2_TP8, topo),
+                   plan_iteration(CFG, SHAPE, DP2_TP8, topo,
+                                  dp_params=DemandParams()))
+
+
+# ---------------------------------------------------------------------------
+# selection reads knob constraints
+# ---------------------------------------------------------------------------
+
+
+def test_select_for_task_constraint_knobs():
+    topo = dgx_cluster(2)
+    model = FlowSim(topo)
+    task = CommTask("t", "all_reduce", 2 ** 24, tuple(topo.accelerators))
+    open_sel = select_for_task(task, model, constraint=Search())
+    assert open_sel.algorithm == select_for_task(task, model).algorithm
+    forced = select_for_task(task, model, constraint=Fixed("ring"))
+    assert forced.algorithm == "ring" and list(forced.costs) == ["ring"]
+    assert forced.algorithm == \
+        select_for_task(task, model, allow=("ring",)).algorithm
+    pair = select_for_task(task, model, constraint=Choice("ring", "tree"))
+    assert set(pair.costs) == {"ring", "tree"}
+    # a Fixed compressed name bypasses the error budget (a force is an
+    # explicit accuracy decision); a Choice whitelist must not
+    q8 = select_for_task(task, model, constraint=Fixed("ring+q8"))
+    assert q8.algorithm == "ring+q8"
+    gated = select_for_task(task, model, constraint=Choice("ring",
+                                                           "ring+q8"))
+    assert gated.algorithm == "ring" and "ring+q8" in gated.excluded
+    with pytest.raises(ValueError):
+        select_for_task(task, model, allow=("ring",),
+                        constraint=Fixed("ring"))
+
+
+# ---------------------------------------------------------------------------
+# placement search: generators + the acceptance-criterion win
+# ---------------------------------------------------------------------------
+
+
+def test_balanced_placement_splits_blocks_evenly():
+    problem = _placement_search_problem()
+    pl = balanced_placement(problem.mesh, problem.topo)
+    # every TP-12 block lands 6+6 on two hosts — the equal partition the
+    # hierarchical decomposition needs (packed lands 8+4)
+    for g in pl.model_groups():
+        sizes = [len(h) for h in problem.topo.host_groups(g)]
+        assert sizes == [6, 6]
+    packed = problem.topo.host_groups(
+        tuple(problem.topo.accelerators[:12]))
+    assert [len(h) for h in packed] == [8, 4]
+    # pure-DP meshes and hostless fabrics yield no balanced candidate
+    assert balanced_placement(DP16, dgx_cluster(2)) is None
+
+
+def test_balanced_placement_handles_model_outer_meshes():
+    """The balanced split targets the mesh's actual model-axis
+    communicators, not consecutive rank blocks — a model-outermost mesh
+    must still land every TP-12 group 6+6 on two hosts."""
+    problem = _placement_search_problem()
+    outer = MeshConfig(shape=(12, 2), axis_names=("model", "data"))
+    pl = balanced_placement(outer, problem.topo)
+    for g in pl.model_groups():
+        assert [len(h) for h in problem.topo.host_groups(g)] == [6, 6]
+    assert len(set(pl.devices)) == outer.num_devices
+
+
+def test_balanced_placement_backfills_uneven_hosts():
+    """Hosts with free slots [8, 4] and a TP-12 block: an even 6+6 split
+    is infeasible, so the share sizing must backfill the larger host
+    (8+4) instead of bailing."""
+    base = fat_tree(num_hosts=2, gpus_per_host=8)
+    topo = dataclasses.replace(base, accelerators=base.accelerators[:12],
+                               hosts=(base.hosts[0], base.hosts[1][:4]))
+    mesh = MeshConfig(shape=(1, 12), axis_names=("data", "model"))
+    pl = balanced_placement(mesh, topo)
+    assert pl is not None
+    assert [len(h) for h in topo.host_groups(pl.model_groups()[0])] == [8, 4]
+    assert sorted(pl.devices) == list(topo.accelerators)
+
+
+def test_heuristic_placements_are_deduped_and_packed_first():
+    problem = _placement_search_problem()
+    cands = heuristic_placements(problem.mesh, problem.topo)
+    assert cands[0].strategy == "packed"
+    assert "balanced" in {c.strategy for c in cands}
+    devsets = [c.devices for c in cands]
+    assert len(devsets) == len(set(devsets))
+    for c in cands:  # all are valid bijections onto real accelerators
+        assert len(set(c.devices)) == len(c.devices)
+        assert set(c.devices) <= set(problem.topo.accelerators)
+
+
+def test_axis_permuted_placement_is_a_bijection():
+    topo = dgx_cluster(2)
+    pl = axis_permuted_placement(DP2_TP8, topo, (1, 0))
+    assert sorted(pl.devices) == list(range(16))
+    assert pl.devices != tuple(range(16))  # actually permuted
+
+
+def test_swap_neighbors_deterministic_and_valid():
+    topo = dgx_cluster(2)
+    pl = Placement(mesh=DP2_TP8, devices=tuple(range(16)),
+                   strategy="packed", topology=topo.name)
+    n1 = [p.devices for _, p in zip(range(20), swap_neighbors(pl, topo))]
+    n2 = [p.devices for _, p in zip(range(20), swap_neighbors(pl, topo))]
+    assert n1 == n2
+    for devs in n1:
+        assert len(set(devs)) == 16 and devs != pl.devices
+
+
+def test_search_placement_beats_packed_on_oversubscribed_fat_tree():
+    """Acceptance: search() over the placement knob finds a Placement with
+    strictly lower FlowSim JCT than packed, and attributes the win."""
+    problem = _placement_search_problem()
+    assert problem.topo.name.startswith("fattree")
+    res = search(problem, budget=12)
+    packed = plan(problem.pinned(placement="packed"))
+    assert res.best.jct < packed.jct - 1e-9
+    assert res.best.placement.strategy == "balanced"
+    assert res.best.cost_model == "flowsim"
+    # the win is the hierarchical unlock, and attribution prices it
+    assert "hierarchical" in res.best.algorithms_by_primitive()["all_reduce"]
+    assert res.attribution["placement"] == \
+        pytest.approx(packed.jct - res.best.jct)
+    # the frontier contains the packed baseline, ranked behind the winner
+    strategies = [c.assignment["placement"].strategy for c in res.frontier]
+    assert "packed" in strategies
+    assert res.frontier[0].jct == res.best.jct
+
+
+def test_search_is_deterministic():
+    problem = _placement_search_problem()
+    r1 = search(problem, budget=10)
+    r2 = search(problem, budget=10)
+    assert r1.best.placement.devices == r2.best.placement.devices
+    assert r1.best.jct == r2.best.jct
+    assert r1.attribution == r2.attribution
+    assert [c.jct for c in r1.frontier] == [c.jct for c in r2.frontier]
+    assert [c.assignment["placement"].devices for c in r1.frontier] == \
+        [c.assignment["placement"].devices for c in r2.frontier]
+
+
+def test_search_budget_caps_evaluations():
+    problem = _placement_search_problem()
+    res = search(problem, budget=1)
+    assert res.evaluated == 1 and res.truncated
+    assert res.best.placement.strategy == "packed"  # first candidate
+    with pytest.raises(ValueError):
+        search(problem, budget=0)
+    # budget exactly covering the heuristic sweep still reports truncated:
+    # the swap-neighborhood refinement never got to run
+    n_heuristics = len(heuristic_placements(problem.mesh, problem.topo))
+    exact = search(problem, budget=n_heuristics)
+    assert exact.evaluated == n_heuristics and exact.truncated
+    # only the winning candidate keeps its full report alive
+    assert exact.frontier[0].report is exact.best
+    assert all(c.report is None for c in exact.frontier[1:])
+
+
+def test_search_enumerates_choice_knobs_with_attribution():
+    topo = dgx_cluster(2)
+    problem = CodesignProblem(
+        CFG, SHAPE, DP2_TP8, topo,
+        space=PlanSpace(placement=Choice("strided", "packed"),
+                        policy=Choice("serial", "priority")))
+    res = search(problem, budget=8)
+    assert res.evaluated == 4 and not res.truncated
+    assert res.best_assignment["placement"] == "packed"
+    # attribution reverts each knob to its declared baseline (first option)
+    reverted = plan(problem.pinned(placement="strided",
+                                   policy=res.best_assignment["policy"]))
+    assert res.attribution["placement"] == \
+        pytest.approx(reverted.jct - res.best.jct)
+    assert set(res.attribution) == {"placement", "policy"}
+
+
+def test_search_without_free_knobs_prices_single_point():
+    topo = dgx_cluster(2)
+    problem = CodesignProblem(CFG, SHAPE, DP2_TP8, topo)
+    res = search(problem, budget=4)
+    assert res.evaluated == 1 and not res.truncated
+    _reports_equal(res.best, plan(problem))
+    assert res.attribution == {}
+
+
+def test_search_infeasible_objective_raises():
+    topo = dgx_cluster(2)
+    problem = CodesignProblem(
+        CFG, SHAPE, DP2_TP8, topo,
+        space=PlanSpace(placement=Choice("packed", "strided")),
+        objective=Objective(max_worst_link_bytes=1.0))
+    with pytest.raises(ValueError, match="feasible"):
+        search(problem, budget=4)
+
+
+def test_search_rejects_open_non_placement_knobs():
+    topo = dgx_cluster(2)
+    problem = CodesignProblem(CFG, SHAPE, DP2_TP8, topo,
+                              space=PlanSpace(policy=Search()))
+    with pytest.raises(ValueError, match="placement"):
+        search(problem, budget=4)
+
+
+# ---------------------------------------------------------------------------
+# JSON serialization round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_codesign_report_round_trips_through_json():
+    topo = dgx_cluster(2)
+    rep = plan_iteration(CFG, SHAPE, DP2_TP8, topo,
+                         error_budget={"all_reduce": 0.01})
+    d = json.loads(json.dumps(rep.to_dict()))
+    back = CodesignReport.from_dict(d)
+    assert back.to_dict() == rep.to_dict()
+    # placement comes back as a real Placement (device list + mesh) and
+    # hotspots as hottest-first link tuples with string keys en route
+    assert back.placement.devices == rep.placement.devices
+    assert back.placement.mesh == rep.placement.mesh
+    assert back.link_hotspots == rep.link_hotspots
+    assert back.algorithms_by_primitive() == rep.algorithms_by_primitive()
+    assert back.codecs_by_primitive() == rep.codecs_by_primitive()
+    assert back.worst_link_bytes == rep.worst_link_bytes
+    assert back.error_budget == {"all_reduce": 0.01}
+    assert all("->" in k for k in d["link_hotspots"])
+    assert back.sim is None  # the live trace intentionally does not travel
+
+
+def test_search_result_round_trips_through_json():
+    res = search(_placement_search_problem(), budget=6)
+    d = json.loads(json.dumps(res.to_dict()))
+    back = SearchResult.from_dict(d)
+    assert back.to_dict() == res.to_dict()
+    assert back.best.jct == res.best.jct
+    assert back.evaluated == res.evaluated
+    assert [c.jct for c in back.frontier] == [c.jct for c in res.frontier]
+    assert isinstance(back.frontier[0], Candidate)
+    # placement assignments come back as real Placements, like a live
+    # result (not as raw serialized dicts)
+    assert isinstance(back.best_assignment["placement"], Placement)
+    assert [c.assignment["placement"].strategy for c in back.frontier] == \
+        [c.assignment["placement"].strategy for c in res.frontier]
+
+
+# ---------------------------------------------------------------------------
+# JobSpec carries a CodesignProblem
+# ---------------------------------------------------------------------------
+
+
+def _cluster_topo():
+    return fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=2,
+                    nic_bw=2e9, agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+
+
+def test_jobspec_problem_equivalent_to_flat_fields():
+    topo = _cluster_topo()
+    mesh = MeshConfig(shape=(4,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    dpp = DemandParams(zero1=False)
+    flat = [JobSpec("jobA", CFG, SHAPE, mesh,
+                    devices=topo.hosts[0] + topo.hosts[2], dp_params=dpp),
+            JobSpec("jobB", CFG, SHAPE, mesh,
+                    devices=topo.hosts[1] + topo.hosts[3], dp_params=dpp)]
+    carried = [JobSpec("jobA", devices=topo.hosts[0] + topo.hosts[2],
+                       problem=CodesignProblem(CFG, SHAPE, mesh, topo,
+                                               dp_params=dpp)),
+               JobSpec("jobB", devices=topo.hosts[1] + topo.hosts[3],
+                       problem=CodesignProblem(CFG, SHAPE, mesh, topo,
+                                               dp_params=dpp))]
+    a = plan_cluster(flat, topo, grid=4)
+    b = plan_cluster(carried, topo, grid=4)
+    assert a.phases == b.phases
+    assert a.naive_jct == b.naive_jct and a.staggered_jct == b.staggered_jct
+    assert list(a.contended) == list(b.contended)
+    # the carried problem fills the flat views
+    assert carried[0].cfg is CFG and carried[0].mesh is mesh
+    assert carried[0].policy == "priority" and carried[0].error_budget == 0.0
+
+
+def test_jobspec_validation():
+    mesh = MeshConfig(shape=(4,), axis_names=("data",), data_axes=("data",),
+                      model_axes=())
+    prob = CodesignProblem(CFG, SHAPE, mesh, _cluster_topo())
+    with pytest.raises(ValueError, match="cfg/shape/mesh"):
+        JobSpec("bare")
+    with pytest.raises(ValueError, match="per-job knobs"):
+        JobSpec("mixed", CFG, SHAPE, mesh, problem=prob)
+    with pytest.raises(ValueError, match="fully specified"):
+        JobSpec("free", problem=dataclasses.replace(
+            prob, space=PlanSpace(policy=Choice("serial", "priority"))))
+    # a carried force surfaces through the flat view and the plan
+    forced = JobSpec("forced", problem=dataclasses.replace(
+        prob, space=PlanSpace(algorithm={"all_reduce": Fixed("ring")})))
+    assert forced.force == {"all_reduce": "ring"}
