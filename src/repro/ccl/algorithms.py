@@ -219,6 +219,24 @@ def ring_all_to_all(task: CommTask) -> FlowSet:
     return fs
 
 
+def ring_permute(task: CommTask) -> FlowSet:
+    """One collective-permute step: every participant sends its chunk to
+    the next ring neighbor.  This is the unit step of a *decomposed*
+    collective (``parallel/collective_matmul.py``): an All-Gather is p-1
+    such permutes interleaved with p partial matmuls, a Reduce-Scatter
+    p-1 permutes of the running accumulator — which is what lets the
+    scheduler hide each step under the adjacent compute chunk."""
+    group = task.group
+    fs = FlowSet(task_id=task.task_id, algorithm="ring")
+    if len(group) <= 1:
+        return fs
+    for src, dst in _ring_neighbors(group):
+        fs.flows.append(Flow(src, dst, task.size_bytes, task.task_id, 0,
+                             task.job_id))
+    fs.num_steps = 1
+    return fs
+
+
 def torus2d_all_reduce(task: CommTask, rows: int = 0) -> FlowSet:
     """Dimension-ordered 2D-torus All-Reduce (what XLA emits on a TPU pod):
     ring reduce-scatter along rows, then along columns on the 1/rows
@@ -429,6 +447,7 @@ ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
     "reduce_scatter": {"ring": ring_reduce_scatter},
     "broadcast": {"binomial": binomial_broadcast},
     "all_to_all": {"direct": direct_all_to_all, "ring": ring_all_to_all},
+    "permute": {"ring": ring_permute},
 }
 
 

@@ -124,6 +124,11 @@ def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
         # n = TOTAL payload (the gathered size / the pre-reduce size)
         if algorithm == "ring":
             return (p - 1) * a + (p - 1) / p * n / b
+    if primitive == "permute":
+        # one neighbor-exchange step of a decomposed collective: every
+        # participant sends size_bytes to its ring successor concurrently
+        if algorithm == "ring":
+            return a + n / b
     if primitive == "broadcast":
         if algorithm == "binomial":
             return math.ceil(math.log2(p)) * (a + n / b)

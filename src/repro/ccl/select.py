@@ -29,6 +29,12 @@ So does the compression lever (``repro.compress``): ``"<base>+<codec>"``
 candidates such as ``ring+q8`` compete on wire-scaled schedules plus
 encode/decode overhead, gated by ``select_for_task``'s ``error_budget``
 (default 0 = lossless only).
+
+Decomposed TP collectives (``core.demand_builder.decompose_demand``)
+arrive here as ``permute`` tasks — one ring neighbor-exchange step each.
+They price through the same path (closed form ``alpha + n/beta``, or the
+one-step flowset on the real topology), and both models' memoization
+collapses the 2(p-1) identical steps per layer to a single evaluation.
 """
 from __future__ import annotations
 

@@ -43,7 +43,8 @@ from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
                               constraint_from_allow, flows_on_topology,
                               select_for_task)
 from repro.compress.codec import base_algorithm, codec_spec, split_algorithm
-from repro.core.demand_builder import DemandParams, build_demand
+from repro.core.demand_builder import (DECOMPOSABLE_PRIMITIVES, DemandParams,
+                                       build_demand, decompose_demand)
 from repro.core.knobs import Choice, Fixed, Knob, Search, as_knob, is_free
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import link_utilization
@@ -57,7 +58,8 @@ from repro.codesign.report import (CodesignReport, TaskChoice,
 
 # the scalar knobs plan() needs pinned and search() may enumerate
 # (per-primitive algorithm knobs are selection constraints instead)
-SCALAR_KNOBS = ("placement", "policy", "error_budget", "switch_capacity")
+SCALAR_KNOBS = ("placement", "policy", "error_budget", "switch_capacity",
+                "bucket_bytes", "decompose")
 
 
 @dataclass(frozen=True)
@@ -69,13 +71,24 @@ class PlanSpace:
     forces (bypassing the error-budget gate, like the legacy single-name
     ``allow``), ``Choice(...)`` whitelists, ``Search()``/absent opens
     the full registry.  ``error_budget`` values may be a float or a
-    primitive -> budget dict (the legacy shapes, verbatim)."""
+    primitive -> budget dict (the legacy shapes, verbatim).
+
+    The two overlap knobs reshape the demand DAG itself:
+    ``bucket_bytes`` (None = legacy per-layer gradient sync; an int =
+    fused buckets of that size chained off the backward layer that
+    filled them; ``Search()`` generates a geometric ladder from the
+    total gradient bytes) and ``decompose`` (False = bulk TP
+    collectives; True = rewrite them into collective-matmul ring
+    permutes riding under split partial matmuls; a tuple of primitive
+    names decomposes just those)."""
 
     placement: Knob = Fixed("packed")
     algorithm: Mapping[str, Knob] = field(default_factory=dict)
     error_budget: Knob = Fixed(0.0)
     policy: Knob = Fixed("priority")
     switch_capacity: Knob = Fixed(None)
+    bucket_bytes: Knob = Fixed(None)
+    decompose: Knob = Fixed(False)
 
     def scalar_knobs(self) -> Dict[str, Knob]:
         return {name: getattr(self, name) for name in SCALAR_KNOBS}
@@ -161,7 +174,9 @@ class CodesignProblem:
                     force: Optional[Dict[str, str]] = None,
                     hotspot_k: int = 8,
                     switch_capacity: Optional[int] = None,
-                    error_budget: Union[float, Dict[str, float]] = 0.0
+                    error_budget: Union[float, Dict[str, float]] = 0.0,
+                    bucket_bytes: Optional[int] = None,
+                    decompose: Union[bool, Tuple[str, ...]] = False
                     ) -> "CodesignProblem":
         """The legacy ``plan_iteration`` keyword surface as a problem:
         ``force`` entries become per-primitive ``Fixed`` knobs, ``allow``
@@ -175,7 +190,8 @@ class CodesignProblem:
         space = PlanSpace(
             placement=Fixed(placement), algorithm=algorithm,
             error_budget=Fixed(error_budget), policy=Fixed(policy),
-            switch_capacity=Fixed(switch_capacity))
+            switch_capacity=Fixed(switch_capacity),
+            bucket_bytes=Fixed(bucket_bytes), decompose=Fixed(decompose))
         return cls(cfg=cfg, shape=shape, mesh=mesh, topo=topo, space=space,
                    cost_model=cost_model, dp_params=dp_params,
                    hotspot_k=hotspot_k)
@@ -259,6 +275,8 @@ def plan(problem: CodesignProblem,
     policy: Policy = space.policy.value
     error_budget = space.error_budget.value
     switch_capacity = space.switch_capacity.value
+    bucket_bytes = space.bucket_bytes.value
+    decompose = space.decompose.value
 
     pl = placement if isinstance(placement, Placement) else \
         place_mesh(problem.mesh, topo, strategy=placement)
@@ -270,7 +288,13 @@ def plan(problem: CodesignProblem,
         else _model_capacity(model)
 
     demand = build_demand(problem.cfg, problem.shape, problem.mesh,
-                          problem.dp_params or DemandParams())
+                          problem.dp_params, bucket_bytes=bucket_bytes)
+    if decompose:
+        # rewrite TP collectives into collective-matmul ring permutes
+        # BEFORE placement, so axis-tagged replica accounting still works
+        prims = DECOMPOSABLE_PRIMITIVES if decompose is True \
+            else tuple(decompose)
+        demand = decompose_demand(demand, primitives=prims)
     placed = pl.place_demand(demand)
 
     def budget_of(primitive: str) -> float:
@@ -352,7 +376,8 @@ def plan(problem: CodesignProblem,
         policy=policy, cost_model=model_name, placement=pl,
         choices=[choices[t.task_id] for t in placed.comm_tasks],
         link_hotspots=hotspots, sim=sim,
-        error_budget=error_budget, wire_bytes_saved=bytes_saved)
+        error_budget=error_budget, wire_bytes_saved=bytes_saved,
+        task_exposed_s=dict(sim.task_exposed_s))
 
 
 # ---------------------------------------------------------------------------
@@ -452,6 +477,30 @@ class SearchResult:
                    truncated=d["truncated"])
 
 
+def _bucket_candidates(problem: CodesignProblem,
+                       seeds: Tuple = ()) -> List[Optional[int]]:
+    """Candidate sizes for ``bucket_bytes=Search()``: ``None`` first (the
+    legacy per-layer baseline attribution reverts to), then a geometric
+    ladder total/2^k over the job's gradient-sync bytes — the classic
+    MG-WFBP/ByteScheduler fusion space, whole-model sync down to fine
+    buckets.  Deterministic; ``seeds`` appends explicit extra sizes."""
+    demand = build_demand(problem.cfg, problem.shape, problem.mesh,
+                          problem.dp_params)
+    total = sum(t.size_bytes for t in demand.comm_tasks
+                if t.axis == "data" and t.before_compute == "opt")
+    floor = 1 << 20  # below ~1 MiB per bucket alpha always dominates
+    out: List[Optional[int]] = [None]
+    if total:
+        for k in (1, 2, 4, 8, 16, 32):
+            v = max(total // k, floor)
+            if v not in out:
+                out.append(v)
+    for s in seeds or ():
+        if s not in out:
+            out.append(int(s))
+    return out
+
+
 def _canon(value) -> Tuple:
     """Hashable identity of an assignment value (dedup key)."""
     if isinstance(value, Placement):
@@ -494,10 +543,15 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
             placement_open = True
             axes[name] = heuristic_placements(problem.mesh, problem.topo,
                                               seeds=knob.seeds)
+        elif name == "bucket_bytes":  # Search: geometric bucket ladder
+            axes[name] = _bucket_candidates(problem, knob.seeds)
+        elif name == "decompose":  # Search: bulk baseline, then rewritten
+            axes[name] = [False, True]
         else:
             raise ValueError(
-                f"knob {name!r} is Search() but only the placement knob "
-                f"has a candidate generator — use Choice(...) for it")
+                f"knob {name!r} is Search() but only placement, "
+                f"bucket_bytes and decompose have candidate generators "
+                f"— use Choice(...) for it")
     pinned = {name: knob.value
               for name, knob in space.scalar_knobs().items()
               if name not in axes}

@@ -38,7 +38,9 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
                    force: Optional[Dict[str, str]] = None,
                    hotspot_k: int = 8,
                    switch_capacity: Optional[int] = None,
-                   error_budget: Union[float, Dict[str, float]] = 0.0
+                   error_budget: Union[float, Dict[str, float]] = 0.0,
+                   bucket_bytes: Optional[int] = None,
+                   decompose: Union[bool, Tuple[str, ...]] = False
                    ) -> CodesignReport:
     """Run one training iteration through the full co-design pipeline.
 
@@ -55,9 +57,13 @@ def plan_iteration(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
     admits compressed candidates (``repro.compress``) into selection — a
     float for every task, or a primitive -> budget dict (e.g.
     ``{"all_reduce": 0.01}`` to quantize gradient syncs while keeping
-    activation collectives exact).  Default 0 = lossless only."""
+    activation collectives exact).  Default 0 = lossless only.
+    ``bucket_bytes``/``decompose``: the overlap knobs — fused gradient
+    buckets of that size, and the collective-matmul rewrite of TP
+    collectives (see ``core.demand_builder``)."""
     return plan(CodesignProblem.from_kwargs(
         cfg, shape, mesh, topo, policy=policy, placement=placement,
         cost_model=cost_model, dp_params=dp_params, allow=allow,
         force=force, hotspot_k=hotspot_k, switch_capacity=switch_capacity,
-        error_budget=error_budget))
+        error_budget=error_budget, bucket_bytes=bucket_bytes,
+        decompose=decompose))

@@ -107,6 +107,10 @@ class CodesignReport:
     # uncompressed (summed over every communicator replica)
     error_budget: Union[float, Dict[str, float]] = 0.0
     wire_bytes_saved: float = 0.0
+    # per-task exposure attribution from the scheduler: seconds compute
+    # stalled waiting on each comm task (sums to ``exposed_comm``) —
+    # the per-edge accounting the overlap search optimizes against
+    task_exposed_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def comm_fraction(self) -> float:
@@ -125,6 +129,13 @@ class CodesignReport:
             hist = out.setdefault(c.primitive, {})
             hist[c.algorithm] = hist.get(c.algorithm, 0) + 1
         return out
+
+    def top_exposed_tasks(self, k: int = 8) -> List[Tuple[str, float]]:
+        """The k comm tasks compute stalled on longest (hot-task
+        attribution, no timeline digging required)."""
+        hot = [(t, s) for t, s in self.task_exposed_s.items() if s > 0]
+        hot.sort(key=lambda ts: (-ts[1], ts[0]))
+        return hot[:k]
 
     def codecs_by_primitive(self) -> Dict[str, Dict[str, int]]:
         """primitive -> {codec or 'none': task count} histogram."""
@@ -156,6 +167,7 @@ class CodesignReport:
             "error_budget": dict(budget) if isinstance(budget, dict)
             else budget,
             "wire_bytes_saved": self.wire_bytes_saved,
+            "task_exposed_s": dict(self.task_exposed_s),
         }
 
     @classmethod
@@ -172,4 +184,5 @@ class CodesignReport:
             sim=None,
             error_budget=dict(budget) if isinstance(budget, dict)
             else budget,
-            wire_bytes_saved=d["wire_bytes_saved"])
+            wire_bytes_saved=d["wire_bytes_saved"],
+            task_exposed_s=dict(d.get("task_exposed_s", {})))

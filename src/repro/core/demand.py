@@ -16,7 +16,7 @@ from typing import Dict, List, Literal, Optional, Sequence, Tuple
 
 Primitive = Literal[
     "all_reduce", "all_gather", "reduce_scatter", "all_to_all",
-    "broadcast", "p2p",
+    "broadcast", "p2p", "permute",
 ]
 
 

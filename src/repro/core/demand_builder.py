@@ -13,11 +13,22 @@ gradient sync unless stated):
   * MoE EP: All-to-All dispatch+combine of the capacity buffers (fwd and
     bwd each) — the Lina/Janus bottleneck traffic
   * PP: p2p activation transfer per microbatch boundary
+
+Two overlap rewrites make the iteration DAG searchable (the codesign
+``bucket_bytes`` / ``decompose`` knobs):
+  * ``bucket_bytes`` coalesces/splits per-layer gradient syncs into a
+    chained bucket DAG — bucket *i* becomes ready the moment the last
+    contributing layer's backward retires (MG-WFBP/ByteScheduler-style
+    tensor fusion), exposing the bucket-size tradeoff to the scheduler.
+  * :func:`decompose_demand` rewrites TP collectives into the p-step
+    ring of ``parallel/collective_matmul.py``: the adjacent matmuls
+    split into p partials and each ring permute rides under a partial.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
-from typing import List, Optional
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core import hw
 from repro.core.demand import CommDemand, CommTask, ComputeTask
@@ -35,7 +46,16 @@ class DemandParams:
 
 
 def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
-                 dp_params: DemandParams = DemandParams()) -> CommDemand:
+                 dp_params: Optional[DemandParams] = None,
+                 bucket_bytes: Optional[int] = None) -> CommDemand:
+    """Emit one iteration's task graph.  ``bucket_bytes`` switches the
+    gradient sync from the legacy per-layer (x ``grad_chunks``) tasks to
+    fused buckets of that size: layer grads accumulate in backward order
+    and a bucket task is emitted the moment it fills, depending on the
+    layer whose backward completed it — so big buckets amortize alpha
+    while small buckets start (and hide) earlier."""
+    if dp_params is None:
+        dp_params = DemandParams()
     tp = mesh.tp
     dp = mesh.dp
     chips = mesh.num_devices
@@ -118,6 +138,20 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
         return demand
 
     # ---------------- backward ----------------
+    grad_prim = "reduce_scatter" if dp_params.zero1 else "all_reduce"
+    bucket_acc = 0        # gradient bytes accumulated towards the bucket
+    bucket_id = 0
+    if bucket_bytes is not None:
+        bucket_bytes = max(1, int(bucket_bytes))
+
+    def emit_bucket(size: int, layer: int, slack: float) -> None:
+        nonlocal bucket_id
+        demand.comm_tasks.append(CommTask(
+            f"gbucket{bucket_id}", grad_prim, size, tuple(range(dp)),
+            after_compute=(f"bwd{layer}",), before_compute="opt",
+            slack=slack, job_id=demand.job_id, axis="data"))
+        bucket_id += 1
+
     for i in reversed(range(len(specs))):
         spec = specs[i]
         flops_dev = bwd_mult * per_layer_params[i] * tokens / chips
@@ -142,21 +176,142 @@ def build_demand(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshConfig,
             # slack = how much bwd compute remains to hide behind
             grad_bytes = int(layer_total_params(spec) / tp
                              * dp_params.grad_bytes)
-            prim = "reduce_scatter" if dp_params.zero1 else "all_reduce"
             remaining = sum(per_layer_params[:i]) * bwd_mult \
                 * tokens / chips / peak
-            nchunks = max(1, dp_params.grad_chunks)
-            for ci in range(nchunks):
-                demand.comm_tasks.append(CommTask(
-                    f"grad{i}.{ci}", prim, grad_bytes // nchunks,
-                    tuple(range(dp)), after_compute=(f"bwd{i}",),
-                    before_compute="opt", slack=remaining,
-                    job_id=demand.job_id, axis="data"))
+            if bucket_bytes is None:
+                # legacy per-layer sync, optionally Lina-split
+                nchunks = max(1, dp_params.grad_chunks)
+                for ci in range(nchunks):
+                    demand.comm_tasks.append(CommTask(
+                        f"grad{i}.{ci}", grad_prim,
+                        grad_bytes // nchunks,
+                        tuple(range(dp)), after_compute=(f"bwd{i}",),
+                        before_compute="opt", slack=remaining,
+                        job_id=demand.job_id, axis="data"))
+            else:
+                # fused buckets: emit every bucket this layer fills
+                # (oversize layers emit several), carry the remainder
+                bucket_acc += grad_bytes
+                while bucket_acc >= bucket_bytes:
+                    emit_bucket(bucket_bytes, i, remaining)
+                    bucket_acc -= bucket_bytes
+    if bucket_bytes is not None and bucket_acc > 0:
+        emit_bucket(bucket_acc, 0, 0.0)  # trailing partial bucket
 
     opt_flops = 10 * pc["total"] / chips  # elementwise AdamW
     demand.compute_tasks.append(ComputeTask(
         "opt", opt_flops, opt_flops / peak, demand.job_id))
     return demand
+
+
+# primitives decompose_demand knows how to rewrite (the codesign
+# ``decompose=True`` knob expands to exactly this tuple)
+DECOMPOSABLE_PRIMITIVES = ("all_reduce", "all_gather", "reduce_scatter")
+
+
+def decompose_demand(demand: CommDemand,
+                     primitives: Sequence[str] = DECOMPOSABLE_PRIMITIVES,
+                     axis: Optional[str] = "model") -> CommDemand:
+    """Rewrite bulk TP collectives into the p-step ring of
+    ``parallel/collective_matmul.py`` (Wang et al., ASPLOS'23).
+
+    A matched task with producer compute ``a`` and consumer ``b`` splits
+    both into p partials (``a#0..a#{p-1}``) and replaces the bulk
+    collective with 2(p-1) ``permute`` tasks carrying n/p each:
+
+      * reduce-scatter half (``matmul_rs``): permute k of the running
+        accumulator becomes ready when partial ``a#{k-1}`` retires and
+        rides the wire under ``a#k``; only the last one gates ``b#0``.
+      * all-gather half (``ag_matmul``): permute k carries the chunk
+        partial ``b#k`` consumes and overlaps ``b#{k-1}`` (double
+        buffering), so steady-state exposure per step is
+        ``max(0, permute - partial)`` — the kernel's actual behaviour.
+
+    Wire bytes are conserved (2(p-1)·n/p per participant = the bulk
+    ring), so any JCT win is pure overlap, not free bandwidth.  A plain
+    ``all_gather`` rewrites to the AG half only (consumer split), a
+    ``reduce_scatter`` to the RS half (producer split).  Tasks whose
+    adjacent compute is missing, or whose producer/consumer is already
+    split with a different factor, are left intact.  Edges of untouched
+    tasks are remapped onto the partials (``after`` -> last partial,
+    ``before`` -> first)."""
+    primitives = tuple(primitives)
+    split: Dict[str, int] = {}          # compute task -> partial count
+    decomposed: Dict[str, Tuple[str, Optional[str]]] = {}  # tid -> (a, b)
+    compute_ids = {c.task_id for c in demand.compute_tasks}
+
+    for t in demand.comm_tasks:
+        p = len(t.group)
+        if (t.primitive not in primitives or p <= 1
+                or (axis is not None and t.axis != axis)):
+            continue
+        a = t.after_compute[0] if len(t.after_compute) == 1 else None
+        b = t.before_compute
+        need = {"all_reduce": (a, b), "all_gather": (None, b),
+                "reduce_scatter": (a, None)}[t.primitive]
+        anchors = [c for c in need if c is not None]
+        if not anchors or any(c not in compute_ids for c in anchors):
+            continue
+        if any(split.get(c, p) != p for c in anchors):
+            continue  # conflicting split factor: leave this task bulk
+        for c in anchors:
+            split[c] = p
+        decomposed[t.task_id] = need
+
+    if not decomposed:
+        return demand
+
+    def last(c: str) -> str:
+        return f"{c}#{split[c] - 1}" if c in split else c
+
+    def first(c: str) -> str:
+        return f"{c}#0" if c in split else c
+
+    out = CommDemand(job_id=demand.job_id)
+    for c in demand.compute_tasks:
+        p = split.get(c.task_id)
+        if p is None:
+            out.compute_tasks.append(c)
+        else:
+            out.compute_tasks.extend(
+                dataclasses.replace(c, task_id=f"{c.task_id}#{k}",
+                                    flops=c.flops / p,
+                                    duration=c.duration / p)
+                for k in range(p))
+
+    for t in demand.comm_tasks:
+        if t.task_id not in decomposed:
+            out.comm_tasks.append(dataclasses.replace(
+                t, after_compute=tuple(last(c) for c in t.after_compute),
+                before_compute=first(t.before_compute)
+                if t.before_compute else None))
+            continue
+        a, b = decomposed[t.task_id]
+        p = len(t.group)
+        chunk = max(1, t.size_bytes // p)
+        # size_bytes convention: all_reduce carries the per-participant
+        # payload, AG/RS the total — either way the ring step moves n/p
+        if a is not None:   # reduce-scatter half, under the producer
+            for k in range(1, p):
+                out.comm_tasks.append(dataclasses.replace(
+                    t, task_id=f"{t.task_id}.rs{k}", primitive="permute",
+                    size_bytes=chunk, after_compute=(f"{a}#{k - 1}",),
+                    before_compute=(first(b) if b is not None else
+                                    first(t.before_compute)
+                                    if t.before_compute else None)
+                    if k == p - 1 else None))
+        if b is not None:   # all-gather half, under the consumer
+            for k in range(1, p):
+                if k == 1:
+                    after = (f"{a}#{p - 1}",) if a is not None else \
+                        tuple(last(c) for c in t.after_compute)
+                else:
+                    after = (f"{b}#{k - 2}",)
+                out.comm_tasks.append(dataclasses.replace(
+                    t, task_id=f"{t.task_id}.ag{k}", primitive="permute",
+                    size_bytes=chunk, after_compute=after,
+                    before_compute=f"{b}#{k}"))
+    return out
 
 
 def janus_traffic_ratio(cfg: ModelConfig, shape: ShapeConfig,

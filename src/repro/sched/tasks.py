@@ -15,7 +15,22 @@ Policies:
                 the dependent compute stalls)
 
 Reports JCT and *exposed communication* (comm time the compute resource
-spends stalled) — the survey's central metric.
+spends stalled) — the survey's central metric.  Exposure is accounted
+per dependency edge: every stall is attributed to the comm task the
+compute resource actually waited on (``SimResult.task_exposed_s``), so
+hot-task attribution no longer has to be inferred from the timeline.
+
+The demand side can hand this scheduler a *pipelined bucket DAG*
+(``build_demand(bucket_bytes=...)``): gradient buckets chain off the
+backward layer that filled them, so bucket i's sync starts when layer
+i's backward retires rather than when the whole backward ends.  That
+makes the classic bucket-size tradeoff (MG-WFBP / ByteScheduler; Shi et
+al., arXiv 2005.13247) visible to the simulator — larger buckets
+amortize the per-step alpha, smaller buckets become ready earlier and
+hide deeper under the remaining backward compute.  Decomposed TP
+collectives (``decompose_demand``) show up here as chains of "permute"
+tasks riding under split partial matmuls, the collective-matmul
+overlap pattern.
 """
 from __future__ import annotations
 
@@ -27,9 +42,10 @@ from repro.core.demand import CommDemand, CommTask, ComputeTask
 Policy = Literal["serial", "fifo", "priority", "slack", "preempt"]
 
 # Lina-style: blocking collectives (MoE All-to-All, pipeline p2p, TP
-# All-Reduce) before the hideable gradient Reduce-Scatter/All-Gather.
-_PRIORITY = {"all_to_all": 0, "p2p": 1, "all_reduce": 2, "broadcast": 2,
-             "all_gather": 3, "reduce_scatter": 3}
+# All-Reduce, decomposed-collective permute steps) before the hideable
+# gradient Reduce-Scatter/All-Gather.
+_PRIORITY = {"all_to_all": 0, "p2p": 1, "permute": 1, "all_reduce": 2,
+             "broadcast": 2, "all_gather": 3, "reduce_scatter": 3}
 
 
 @dataclass
@@ -43,6 +59,9 @@ class SimResult:
     # returns (seconds, algorithm) pairs (the codesign driver does)
     algo_choices: Dict[str, str] = field(default_factory=dict)
     task_comm_s: Dict[str, float] = field(default_factory=dict)
+    # per-task exposure attribution: seconds the compute resource spent
+    # stalled waiting on each comm task (sums to ``exposed_comm``)
+    task_exposed_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def comm_fraction(self) -> float:
@@ -86,6 +105,7 @@ def simulate_iteration(demand: CommDemand,
     timeline: List[Tuple[str, float, float]] = []
     algo_choices: Dict[str, str] = {}
     task_comm_s: Dict[str, float] = {}
+    task_exposed_s: Dict[str, float] = {t.task_id: 0.0 for t in comm_tasks}
 
     def ready_comms() -> List[CommTask]:
         return [t for t in comm_tasks
@@ -136,6 +156,17 @@ def simulate_iteration(demand: CommDemand,
             done_comm.add(running[1].task_id)
             running = None
 
+    def wait_for_running():
+        """Stall compute until the in-flight comm finishes; the stall is
+        exposure, attributed to the task that was on the wire."""
+        nonlocal t_compute, exposed
+        fin, task = running
+        if fin > t_compute:
+            exposed += fin - t_compute
+            task_exposed_s[task.task_id] += fin - t_compute
+            t_compute = fin
+        finish_running()
+
     i = 0
     compute_list = list(demand.compute_tasks)
     guard = 0
@@ -151,31 +182,19 @@ def simulate_iteration(demand: CommDemand,
             if waiting:
                 # must wait for comm -> advance time to the running finish
                 if running is not None and running[1].task_id in waiting:
-                    fin = running[0]
-                    if fin > t_compute:
-                        exposed += fin - t_compute
-                        t_compute = fin
-                    finish_running()
+                    wait_for_running()
                 elif running is not None:
                     if policy == "preempt" and t_compute < running[0]:
                         # pause the non-blocking transfer, let the blocker in
                         preempt_running(max(t_compute, run_start))
                         continue
                     # some other comm on the wire; let it finish first
-                    fin = running[0]
-                    if fin > t_compute:
-                        exposed += fin - t_compute
-                        t_compute = fin
-                    finish_running()
+                    wait_for_running()
                 else:
                     continue  # blocker will be started next loop
                 continue
             if policy == "serial" and running is not None:
-                fin = running[0]
-                if fin > t_compute:
-                    exposed += fin - t_compute
-                    t_compute = fin
-                finish_running()
+                wait_for_running()
                 continue
             # run compute
             timeline.append((f"comp:{ct.task_id}", t_compute,
@@ -189,11 +208,7 @@ def simulate_iteration(demand: CommDemand,
             continue
         # only comm left
         if running is not None:
-            fin = running[0]
-            if fin > t_compute:
-                exposed += fin - t_compute
-                t_compute = fin
-            finish_running()
+            wait_for_running()
         elif not ready_comms():
             break
 
@@ -202,4 +217,5 @@ def simulate_iteration(demand: CommDemand,
     return SimResult(jct=jct, compute_time=compute_time,
                      comm_time=comm_total, exposed_comm=exposed,
                      timeline=timeline, algo_choices=algo_choices,
-                     task_comm_s=task_comm_s)
+                     task_comm_s=task_comm_s,
+                     task_exposed_s=task_exposed_s)
