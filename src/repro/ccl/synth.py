@@ -29,7 +29,13 @@ from repro.net.topology import Topology
 
 @dataclass(frozen=True)
 class Sketch:
-    """Designer hints that constrain the synthesis search space."""
+    """Designer hints that constrain the synthesis search space.
+
+    ``allowed_links`` names *physical* links: permission is
+    orientation-free, so listing ``(u, v)`` also admits ``(v, u)`` when
+    the topology has the reverse edge (an asymmetric sketch used to
+    KeyError when a shortest path traversed a link against its listed
+    orientation)."""
 
     allowed_links: Optional[Set[Tuple]] = None   # None = all
     entry_nodes: Optional[Dict[str, int]] = None  # host tag -> preferred gpu
@@ -84,7 +90,14 @@ def synthesize(topo: Topology, task: CommTask,
 
     graph = topo.graph
     if sketch.allowed_links is not None:
-        graph = graph.edge_subgraph(sketch.allowed_links).copy()
+        # sketches name physical links; admit both orientations that
+        # exist so paths may traverse a listed link in reverse
+        allowed = set()
+        for u, v in sketch.allowed_links:
+            for a, b in ((u, v), (v, u)):
+                if topo.graph.has_edge(a, b):
+                    allowed.add((a, b))
+        graph = graph.edge_subgraph(allowed).copy()
 
     link_free: Dict[Tuple, float] = {}
     have: Dict[int, Dict[int, float]] = {}  # chunk -> node -> time available
@@ -99,6 +112,11 @@ def synthesize(topo: Topology, task: CommTask,
     tx_time = {}
     for u, v, d in graph.edges(data=True):
         tx_time[(u, v)] = chunk_bytes / d["bw"] + d["lat"]
+    # concurrency rounds: transfers that share no link and whose chunk is
+    # already in place run in the same step, so FlowSim prices the greedy
+    # list schedule's real overlap instead of a fully serialized chain
+    link_wave: Dict[Tuple, int] = {}
+    chunk_wave: Dict[Tuple[int, int], int] = {}
 
     pending = list(demands)
     max_rounds = len(pending) * 4
@@ -131,12 +149,19 @@ def synthesize(topo: Topology, task: CommTask,
                 continue
             t_final, holder, path = best
             t = have[ci][holder]
-            step = len(fs.flows)
-            for u, v in zip(path[:-1], path[1:]):
+            path_links = list(zip(path[:-1], path[1:]))
+            # the move's round: after the chunk reached the holder, and
+            # after every earlier occupant of the links it crosses
+            step = chunk_wave.get((ci, holder), 0)
+            for link in path_links:
+                step = max(step, link_wave.get(link, 0))
+            for u, v in path_links:
                 start = max(t, link_free.get((u, v), 0.0))
                 t = start + tx_time[(u, v)]
                 link_free[(u, v)] = t
+                link_wave[(u, v)] = step + 1
             have[ci][dst] = t
+            chunk_wave[(ci, dst)] = step + 1
             # endpoint-level flow (the simulator re-routes along the path)
             fs.flows.append(Flow(holder, dst, chunk_bytes, task.task_id,
                                  step, task.job_id))
@@ -144,7 +169,7 @@ def synthesize(topo: Topology, task: CommTask,
         pending = [d for d in pending if d not in progressed]
         if not progressed:
             break
-    fs.num_steps = len(fs.flows)
+    fs.num_steps = max((f.step for f in fs.flows), default=-1) + 1
     # the greedy list schedule's own makespan (link-occupancy tracking)
     fs.makespan = max(link_free.values(), default=0.0)
     return fs

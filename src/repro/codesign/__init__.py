@@ -59,6 +59,17 @@ together behind one declarative surface:
     ``ClusterReport`` (naive vs. staggered per-job JCT, contended links,
     chosen phases).
 
+``dynamics``
+    The cluster as a moving target: ``ClusterDynamics`` consumes a trace
+    of ``Event``s (job arrival/departure, link failure/degradation, host
+    failure, stragglers) over degradation views of the topology and
+    re-plans *incrementally* — vertical re-plans only for jobs whose
+    routes the event touched, phase re-search only over the dirty jobs
+    (``restagger_cluster``), full ``plan_cluster`` re-search as the
+    infeasibility fallback.  Warm-starts from a persisted
+    ``ClusterReport``; ``DynamicsReport`` records per-event
+    time-to-replan and regret vs. a full re-search.
+
 "Host-Net" in-network aggregation is a first-class selection candidate:
 ``sched.atp`` exposes the aggregation capability (with the multi-tenant
 switch-memory fallback) and both cost models price the ``atp`` all-reduce
@@ -84,4 +95,7 @@ from repro.codesign.placement_search import (  # noqa: F401
     balanced_placement, heuristic_placements, swap_neighbors)
 from repro.codesign.driver import plan_iteration  # noqa: F401
 from repro.codesign.cluster import (ClusterReport, JobPlan,  # noqa: F401
-                                    JobSpec, plan_cluster)
+                                    JobSpec, plan_cluster,
+                                    restagger_cluster)
+from repro.codesign.dynamics import (ClusterDynamics,  # noqa: F401
+                                     DynamicsReport, Event, EventRecord)

@@ -33,12 +33,14 @@ from repro.core.knobs import Fixed
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import shared_link_load
 from repro.net.topology import Topology
-from repro.sched.flows import JobProfile, stagger_jobs, worst_stretch
+from repro.sched.flows import (JobProfile, restagger_jobs, stagger_jobs,
+                               worst_stretch)
 from repro.sched.tasks import Policy
 
 from repro.codesign.api import CodesignProblem, plan
 from repro.codesign.placement import Placement, place_mesh
-from repro.codesign.report import CodesignReport
+from repro.codesign.report import (CodesignReport, _link_key,
+                                   _parse_link_key)
 
 
 @dataclass(frozen=True)
@@ -131,6 +133,30 @@ class JobPlan:
     profile: JobProfile
     link_bytes: Dict[Tuple, float]
 
+    def to_dict(self) -> Dict:
+        """Plain-JSON form (the ``spec`` carries live configs and is keyed
+        by name only — ``from_dict`` takes the live specs back)."""
+        return {
+            "name": self.spec.name, "devices": list(self.devices),
+            "report": self.report.to_dict(),
+            "profile": {"compute_s": self.profile.compute_s,
+                        "comm_s": self.profile.comm_s,
+                        "demand_frac": self.profile.demand_frac},
+            "link_bytes": {_link_key(l): b
+                           for l, b in self.link_bytes.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict, spec: JobSpec) -> "JobPlan":
+        p = d["profile"]
+        return cls(
+            spec=spec, devices=tuple(d["devices"]),
+            report=CodesignReport.from_dict(d["report"]),
+            profile=JobProfile(d["name"], p["compute_s"], p["comm_s"],
+                               p["demand_frac"]),
+            link_bytes={_parse_link_key(k): b
+                        for k, b in d["link_bytes"].items()})
+
 
 @dataclass
 class ClusterReport:
@@ -164,6 +190,47 @@ class ClusterReport:
     def stagger_speedup(self) -> float:
         """Worst-case JCT improvement of staggering over zero phases."""
         return self.naive_worst_stretch / self.staggered_worst_stretch
+
+    # ------------------------------------------------------------------
+    # JSON persistence (the warm-start seed codesign.dynamics re-plans
+    # from: per-job reports round-trip via CodesignReport, links as
+    # "u->v" keys; JobSpec objects carry live model configs so from_dict
+    # takes them back by name)
+    # ------------------------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        return {
+            "jobs": [jp.to_dict() for jp in self.jobs],
+            "contended": {_link_key(l): dict(users)
+                          for l, users in self.contended.items()},
+            "phases": dict(self.phases),
+            "naive_jct": dict(self.naive_jct),
+            "staggered_jct": dict(self.staggered_jct),
+            "cost_model": self.cost_model,
+            "link_demands": {name: {_link_key(l): f
+                                    for l, f in dem.items()}
+                             for name, dem in self.link_demands.items()},
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict, specs: Dict[str, JobSpec]
+                  ) -> "ClusterReport":
+        missing = [j["name"] for j in d["jobs"] if j["name"] not in specs]
+        if missing:
+            raise ValueError(f"ClusterReport.from_dict needs the live "
+                             f"JobSpec for {missing} (specs= by name)")
+        return cls(
+            jobs=[JobPlan.from_dict(j, specs[j["name"]])
+                  for j in d["jobs"]],
+            contended={_parse_link_key(k): dict(users)
+                       for k, users in d["contended"].items()},
+            phases=dict(d["phases"]),
+            naive_jct=dict(d["naive_jct"]),
+            staggered_jct=dict(d["staggered_jct"]),
+            cost_model=d["cost_model"],
+            link_demands={name: {_parse_link_key(k): f
+                                 for k, f in dem.items()}
+                          for name, dem in d["link_demands"].items()})
 
 
 def _carve_devices(jobs: Sequence[JobSpec], topo: Topology
@@ -209,12 +276,20 @@ def _carve_devices(jobs: Sequence[JobSpec], topo: Topology
     return out  # type: ignore[return-value]
 
 
-def _job_profile(name: str, report: CodesignReport) -> JobProfile:
-    """Compress a CodesignReport into the flow scheduler's pulse model:
-    the comm burst is the network-busy time, the compute phase is the rest
-    of the iteration, so the period equals the job's solo JCT."""
-    comm_s = min(report.comm_time, report.jct)
-    compute_s = max(report.jct - comm_s, 1e-9)
+def _job_profile(name: str, report: CodesignReport,
+                 compute_scale: float = 1.0) -> JobProfile:
+    """Compress a CodesignReport into the flow scheduler's pulse model.
+
+    The comm burst is the *exposed* communication — the stretch of the
+    iteration where the network gates progress.  Overlapped plans hide
+    most of ``comm_time`` under compute; using the raw busy time there
+    overstated the burst, inflated apparent contention, and mis-staggered
+    phases (for serial plans the two are identical).  The compute phase
+    is the rest of the iteration, so the period equals the job's solo
+    JCT.  ``compute_scale`` > 1 models a straggler (slowed compute, same
+    burst — the ``codesign.dynamics`` event)."""
+    comm_s = max(min(report.exposed_comm, report.jct), 0.0)
+    compute_s = max(report.jct - comm_s, 1e-9) * compute_scale
     return JobProfile(name, compute_s, comm_s)
 
 
@@ -249,16 +324,25 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
             profile=_job_profile(spec.name, report),
             link_bytes=dict(report.link_hotspots)))
     model_name = plans[0].report.cost_model  # as the driver resolved it
+    return _stagger_plans(plans, topo, grid=grid,
+                          horizon_iters=horizon_iters, dt=dt,
+                          max_contended_links=max_contended_links,
+                          cost_model=model_name)
 
-    # --- horizontal layer: which links do >= 2 jobs press on? -------------
+
+def _detect_contention(plans: Sequence[JobPlan], topo: Topology,
+                       max_contended_links: int
+                       ) -> Tuple[Dict[Tuple, Dict[str, float]],
+                                  List[Dict[Tuple, float]]]:
+    """Contended links (>= 2 jobs) + per-job demand fractions over them.
+    Pure dict math over the plans' link-byte maps — cheap enough to rerun
+    on every dynamics event."""
     contended = shared_link_load(
         {jp.spec.name: jp.link_bytes for jp in plans})
     if len(contended) > max_contended_links:
         hottest = sorted(contended,
                          key=lambda l: -sum(contended[l].values()))
         contended = {l: contended[l] for l in hottest[:max_contended_links]}
-
-    profiles = [jp.profile for jp in plans]
     link_demands = []
     for jp in plans:
         comm_s = max(jp.profile.comm_s, 1e-12)
@@ -270,6 +354,22 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
             bw = topo.link_bw(*link)
             dem[link] = min(1.0, nbytes / (bw * comm_s))
         link_demands.append(dem)
+    return contended, link_demands
+
+
+def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
+                   horizon_iters: int, dt: Optional[float],
+                   max_contended_links: int, cost_model: str,
+                   phases: Optional[Dict[str, float]] = None,
+                   dirty: Optional[Sequence[str]] = None) -> ClusterReport:
+    """The horizontal layer's back half: contention detection -> demand
+    maps -> phase search.  With ``phases``/``dirty`` given, only the
+    dirty jobs' phases are searched (the rest stay frozen — incremental
+    re-planning); otherwise the full CASSINI grid runs."""
+    names = [jp.spec.name for jp in plans]
+    contended, link_demands = _detect_contention(plans, topo,
+                                                 max_contended_links)
+    profiles = [jp.profile for jp in plans]
 
     if not contended:
         # nothing shared: every job runs at its solo JCT, staggering no-op
@@ -278,18 +378,62 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
             jobs=plans, contended={},
             phases={n: 0.0 for n in names},
             naive_jct=dict(solo), staggered_jct=dict(solo),
-            cost_model=model_name,
+            cost_model=cost_model,
             link_demands={n: {} for n in names})
 
     if dt is None:
         dt = min(p.period for p in profiles) / 400.0
-    best_phases, naive, staggered = stagger_jobs(
-        profiles, grid=grid, link_demands=link_demands,
-        horizon_iters=horizon_iters, dt=dt)
+    if phases is None:
+        best_phases, naive, staggered = stagger_jobs(
+            profiles, grid=grid, link_demands=link_demands,
+            horizon_iters=horizon_iters, dt=dt)
+    else:
+        current = [phases.get(n, 0.0) for n in names]
+        dirty_set = set(names if dirty is None else dirty)
+        free = [i for i, n in enumerate(names) if n in dirty_set]
+        if len(free) == len(names) and len(free) > 1:
+            # every phase free: a uniform shift of all phases is just a
+            # time-origin change, so pin the first job as the reference
+            # (as stagger_jobs does) and sweep one fewer grid dimension
+            free = free[1:]
+        best_phases, naive, staggered = restagger_jobs(
+            profiles, current, free, grid=grid,
+            link_demands=link_demands, horizon_iters=horizon_iters, dt=dt)
     return ClusterReport(
         jobs=plans, contended=contended,
         phases=dict(zip(names, best_phases)),
         naive_jct=naive, staggered_jct=staggered,
-        cost_model=model_name,
+        cost_model=cost_model,
         link_demands={jp.spec.name: d
                       for jp, d in zip(plans, link_demands)})
+
+
+def restagger_cluster(plans: List[JobPlan], topo: Topology,
+                      phases: Dict[str, float],
+                      dirty: Sequence[str], grid: int = 8,
+                      horizon_iters: int = 12, dt: Optional[float] = None,
+                      max_contended_links: int = 8,
+                      cost_model: str = "flowsim") -> ClusterReport:
+    """Incrementally re-stagger a cluster plan: jobs named in ``dirty``
+    get fresh phase offsets, everyone else keeps ``phases``.  This is
+    the horizontal half of event-driven re-planning — contention is
+    re-detected from the plans' (possibly re-routed) link maps, but the
+    phase grid only sweeps the jobs whose demand actually changed, so
+    the search is ``grid**len(dirty)`` instead of ``grid**(n-1)``.
+
+    ``naive_jct`` in the returned report is the cluster at the *frozen*
+    phases (the do-nothing baseline an event leaves behind), so
+    ``stagger_speedup`` measures what the incremental re-stagger
+    recovered."""
+    if not plans:
+        raise ValueError("restagger_cluster needs at least one JobPlan")
+    names = {jp.spec.name for jp in plans}
+    unknown = set(dirty) - names
+    if unknown:
+        raise ValueError(f"dirty jobs {sorted(unknown)} not in cluster "
+                         f"{sorted(names)}")
+    return _stagger_plans(plans, topo, grid=grid,
+                          horizon_iters=horizon_iters, dt=dt,
+                          max_contended_links=max_contended_links,
+                          cost_model=cost_model, phases=phases,
+                          dirty=dirty)

@@ -109,6 +109,72 @@ class Topology:
     def num_accelerators(self) -> int:
         return len(self.accelerators)
 
+    # ------------------------------------------------------------------
+    # Degradation views (codesign.dynamics consumers)
+    # ------------------------------------------------------------------
+    #
+    # Production clusters churn: links fail or degrade, hosts drop out.
+    # Each view returns a NEW Topology sharing nothing mutable with this
+    # one (fresh graph copy, fresh path/host caches), so the event loop
+    # can re-plan on the degraded fabric while the base topology keeps
+    # answering queries for the healthy state.
+
+    def without_link(self, u, v, symmetric: bool = True) -> "Topology":
+        """View with the ``u<->v`` link removed (``symmetric=False`` drops
+        only the ``u->v`` orientation).  Missing edges are ignored, so
+        stacking failures is idempotent."""
+        g = self.graph.copy()
+        for a, b in ((u, v), (v, u)) if symmetric else ((u, v),):
+            if g.has_edge(a, b):
+                g.remove_edge(a, b)
+        return Topology(g, name=f"{self.name}-link({u},{v})",
+                        accelerators=self.accelerators, hosts=self.hosts)
+
+    def without_host(self, host: int) -> "Topology":
+        """View with one host's accelerators (and their incident links)
+        removed.  ``host`` indexes ``hosts``; the surviving hosts keep
+        their relative order (indices shift — views are snapshots, not
+        stable ids)."""
+        if not 0 <= host < len(self.hosts):
+            raise ValueError(f"host {host} out of range "
+                             f"(topology has {len(self.hosts)} hosts)")
+        dead = set(self.hosts[host])
+        g = self.graph.copy()
+        g.remove_nodes_from(dead)
+        return Topology(
+            g, name=f"{self.name}-host{host}",
+            accelerators=tuple(a for a in self.accelerators
+                               if a not in dead),
+            hosts=tuple(h for i, h in enumerate(self.hosts) if i != host))
+
+    def scaled_bw(self, factors) -> "Topology":
+        """View with link bandwidths scaled: ``factors`` is either one
+        float applied to every link, or a ``{(u, v): factor}`` map (each
+        entry scales both orientations of its link; factors must be
+        > 0 — use :meth:`without_link` for outright failure)."""
+        # normalize to one factor per *directed* edge before applying:
+        # a dict entry names a physical link (both orientations), but the
+        # scalar form enumerates graph.edges(), which already lists each
+        # orientation — expanding those to both directions again would
+        # scale every link twice
+        per_edge = {}
+        if not isinstance(factors, dict):
+            per_edge = {(u, v): float(factors)
+                        for u, v in self.graph.edges()}
+        else:
+            for (u, v), f in factors.items():
+                for a, b in ((u, v), (v, u)):
+                    if self.graph.has_edge(a, b):
+                        per_edge[(a, b)] = f
+        g = self.graph.copy()
+        for (u, v), f in per_edge.items():
+            if f <= 0:
+                raise ValueError(f"bandwidth factor for ({u}, {v}) must "
+                                 f"be > 0, got {f} (use without_link)")
+            g[u][v]["bw"] = g[u][v]["bw"] * f
+        return Topology(g, name=f"{self.name}-degraded",
+                        accelerators=self.accelerators, hosts=self.hosts)
+
 
 def _new_graph():
     return nx.DiGraph()
@@ -172,21 +238,38 @@ def fat_tree(num_hosts: int, gpus_per_host: int = 8,
              nic_bw: float = 25e9, agg_bw: float = 100e9,
              core_bw: float = 400e9, oversub: float = 1.0,
              pcie_bw: float = 32e9, lat: float = 2e-6,
-             hosts_per_rack: int = 4, racks_per_pod: int = 4) -> Topology:
+             hosts_per_rack: int = 4, racks_per_pod: int = 4,
+             agg_redundancy: int = 1) -> Topology:
     """Three-tier fat-tree (ToR / Agg / Core) with hosts of ``gpus_per_host``
     GPUs behind a NIC — the Fig. 5(b) setting.  ``oversub`` > 1 thins the
-    uplinks."""
+    uplinks.  ``agg_redundancy`` > 1 gives each pod that many parallel agg
+    switches (every ToR uplinks to all of them, per-uplink bandwidth split
+    so pod capacity is unchanged) — the multi-path tier that lets
+    ``Topology.without_link`` failures re-route instead of partitioning
+    the tree."""
+    if agg_redundancy < 1:
+        raise ValueError(f"agg_redundancy must be >= 1, got "
+                         f"{agg_redundancy}")
     g = _new_graph()
     accel = []
     num_racks = (num_hosts + hosts_per_rack - 1) // hosts_per_rack
     num_pods = (num_racks + racks_per_pod - 1) // racks_per_pod
     core = "core"
+
+    def agg_name(pod: int, k: int) -> str:
+        # keep the legacy single-agg node names so redundancy=1 graphs
+        # are byte-identical to what earlier PRs priced
+        return f"agg{pod}" if agg_redundancy == 1 else f"agg{pod}.{k}"
+
     for r in range(num_racks):
         tor = f"tor{r}"
-        agg = f"agg{r // racks_per_pod}"
-        _bilink(g, tor, agg, agg_bw / oversub, lat)
+        for k in range(agg_redundancy):
+            _bilink(g, tor, agg_name(r // racks_per_pod, k),
+                    agg_bw / oversub / agg_redundancy, lat)
     for p in range(num_pods):
-        _bilink(g, f"agg{p}", core, core_bw / oversub, lat)
+        for k in range(agg_redundancy):
+            _bilink(g, agg_name(p, k), core,
+                    core_bw / oversub / agg_redundancy, lat)
     gid = 0
     hosts = []
     for h in range(num_hosts):

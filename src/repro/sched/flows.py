@@ -19,10 +19,10 @@ Two granularities:
     ``codesign.cluster.plan_cluster``; a job's burst progresses at the rate
     of its most-contended link (the network-layer bottleneck rule).
 
-The time-step ``dt`` and simulation ``horizon_iters`` are part of the
-public API (they default to values for ~10ms-scale iterations; callers with
-much shorter periods should shrink ``dt`` — see ``tests/test_sched.py``'s
-convergence check).
+The simulator steps from phase transition to phase transition (rates are
+piecewise constant in between), so results are exact and independent of
+the ``dt`` knob, which survives in signatures as a floating-point fallback
+step — see ``tests/test_sched.py``'s convergence check.
 """
 from __future__ import annotations
 
@@ -77,31 +77,47 @@ def _simulate_links(jobs: Sequence[JobProfile], phases: Sequence[float],
     # would starve a slow tenant sharing with a much faster one and report
     # inf); the wall-clock cap guards pathological stretch
     max_t = horizon_iters * max(j.period for j in jobs) * (len(jobs) + 3)
+    # Event-driven stepping: link demand (and so every job's rate) is
+    # piecewise constant between phase transitions, so advancing exactly
+    # onto the next transition integrates the sharing model *exactly*.
+    # The old fixed-dt loop discarded each transition's overshoot and
+    # held other jobs' rates stale across the transition step, an O(dt)
+    # bias per phase per job that made dt-halving converge only first
+    # order.  ``dt`` is kept as a public knob / fp fallback: steps never
+    # need to be smaller than the next event, so results are now
+    # dt-independent (dt-halving changes nothing but runtime).
     while any(s["iters"] < horizon_iters for s in state) and t < max_t:
         total_d: Dict[Hashable, float] = {}
         for s, dem in zip(state, link_demands):
             if s["phase"] == "comm":
                 for link, d in dem.items():
                     total_d[link] = total_d.get(link, 0.0) + d
+        rates = []
         for s, dem in zip(state, link_demands):
             if s["phase"] == "compute":
-                s["remaining"] -= dt
-                if s["remaining"] <= 0:
-                    s["phase"] = "comm"
-                    s["remaining"] = s["job"].comm_s
+                rates.append(1.0)
             else:
                 rate = 1.0
                 for link in dem:
                     td = total_d.get(link, 0.0)
                     if td > 1.0:
                         rate = min(rate, 1.0 / td)
-                s["remaining"] -= dt * rate
-                if s["remaining"] <= 0:
+                rates.append(rate)
+        step = min((s["remaining"] / r for s, r in zip(state, rates)
+                    if r > 0), default=dt)
+        step = max(step, 1e-12)  # fp guard: always make progress
+        for s, rate in zip(state, rates):
+            s["remaining"] -= step * rate
+            if s["remaining"] <= 1e-12:
+                if s["phase"] == "compute":
+                    s["phase"] = "comm"
+                    s["remaining"] = s["job"].comm_s
+                else:
                     s["phase"] = "compute"
                     s["remaining"] = s["job"].compute_s
                     s["iters"] += 1
-                    s["t_done"].append(t)
-        t += dt
+                    s["t_done"].append(t + step)
+        t += step
     out = {}
     for s in state:
         if s["iters"] >= 2:
@@ -160,5 +176,51 @@ def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8,
         if val < best_val - 1e-9:
             best_val = val
             best = phases
+            best_jct = jct
+    return best, base, best_jct
+
+
+def restagger_jobs(jobs: Sequence[JobProfile], phases: Sequence[float],
+                   free: Sequence[int], grid: int = 8,
+                   link_demands: Optional[LinkDemands] = None,
+                   horizon_iters: int = 20, dt: float = 1e-4
+                   ) -> Tuple[Tuple[float, ...], Dict[str, float],
+                              Dict[str, float]]:
+    """Incremental CASSINI: search phase offsets only for the jobs at the
+    ``free`` indices, holding every other job at its current phase — the
+    horizontal half of event-driven re-planning (``codesign.dynamics``),
+    where only the jobs touching changed links are dirty and the full
+    ``grid**(n-1)`` sweep of :func:`stagger_jobs` is wasted work.
+
+    Returns ``(best_phases, jct_at_current_phases, jct_staggered)``.  The
+    current phase vector is in the search set, so the re-staggered worst
+    case is never worse than leaving the phases untouched."""
+    if len(phases) != len(jobs):
+        raise ValueError(f"{len(phases)} phases for {len(jobs)} jobs")
+    bad = [i for i in free if not 0 <= i < len(jobs)]
+    if bad:
+        raise ValueError(f"free indices {bad} out of range for "
+                         f"{len(jobs)} jobs")
+    base_phases = tuple(phases)
+
+    def sim(ph):
+        return _simulate_links(jobs, ph, link_demands, horizon_iters, dt)
+
+    base = sim(base_phases)
+    best = base_phases
+    best_jct = base
+    best_val = worst_stretch(base, jobs)
+    free = sorted(set(free))
+    grids = [[i / grid * jobs[f].period for i in range(grid)]
+             for f in free]
+    for combo in itertools.product(*grids):
+        ph = list(base_phases)
+        for f, v in zip(free, combo):
+            ph[f] = v
+        jct = sim(tuple(ph))
+        val = worst_stretch(jct, jobs)
+        if val < best_val - 1e-9:
+            best_val = val
+            best = tuple(ph)
             best_jct = jct
     return best, base, best_jct

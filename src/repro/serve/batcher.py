@@ -6,8 +6,9 @@ are admitted into free slots mid-flight (their prompt is replayed through
 the same batched decode step while other slots keep generating), finished
 slots are recycled.  Works for every architecture family: the GQA ring
 buffer and MLA latent cache invalidate stale entries purely from the
-slot's position, and recurrent (SSM/conv) state plus cross-attention
-caches are zeroed on admit.
+slot's position, recurrent (SSM/conv) state is zeroed on admit, and
+precomputed cross-attention K/V (shared context, no slot axis) is left
+untouched.
 """
 from __future__ import annotations
 
@@ -41,6 +42,22 @@ class ContinuousBatcher:
         self.max_len = max_len
         self.cache = init_cache(cfg, params, max_slots, max_len,
                                 context=context)
+        # Identify each cache leaf's slot axis *structurally*: the one
+        # axis whose extent changes with max_slots (compared via
+        # eval_shape, no allocation).  Matching shape[1] == max_slots
+        # false-positived when a head/layer/window axis coincidentally
+        # equalled max_slots, zeroing live state for every slot.
+        shapes = [
+            jax.eval_shape(lambda n=n: init_cache(cfg, params, n, max_len,
+                                                  context=context))
+            for n in (max_slots, max_slots + 1)]
+
+        def slot_axis(a, b) -> int:
+            diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                    if x != y]
+            return diff[0] if len(diff) == 1 else -1  # -1 = no slot axis
+
+        self._slot_axis = jax.tree.map(slot_axis, *shapes)
         self.pos = np.zeros(max_slots, np.int32)      # next write position
         self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.slot_pending: List[List[int]] = [[] for _ in range(max_slots)]
@@ -53,16 +70,25 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int, rid: int) -> None:
+        # a prompt needs max_len - 1 positions at most: one slot must stay
+        # free to generate into.  Longer prompts used to be admitted, hit
+        # the pos >= max_len - 1 stop mid-replay, and were returned "done"
+        # with garbage output — reject up front instead.
+        if len(prompt) > self.max_len - 1:
+            raise ValueError(
+                f"request {rid}: prompt has {len(prompt)} tokens but "
+                f"max_len={self.max_len} leaves room for at most "
+                f"{self.max_len - 1}; truncate the prompt or raise max_len")
         self.queue.append(Request(rid, list(prompt), max_new))
 
     def _reset_slot_state(self, slot: int) -> None:
         """Zero recurrent/cross state for a recycled slot (KV ring buffers
         and MLA caches self-invalidate from the position)."""
-        def zero_slot(a):
-            if a.ndim >= 2 and a.shape[1] == self.max_slots:
-                return a.at[:, slot].set(0)
-            return a
-        self.cache = jax.tree.map(zero_slot, self.cache)
+        def zero_slot(a, ax):
+            if ax < 0:
+                return a
+            return a.at[(slice(None),) * ax + (slot,)].set(0)
+        self.cache = jax.tree.map(zero_slot, self.cache, self._slot_axis)
 
     def _admit(self) -> None:
         for s in range(self.max_slots):

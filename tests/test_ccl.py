@@ -173,3 +173,43 @@ def test_synthesis_respects_sketch_links():
     for f in fs.flows:
         # each move stays within the sketch's hop bound
         assert len(topo.path_links(f.src, f.dst)) <= 3
+
+
+def test_synthesis_steps_encode_concurrency():
+    """Independent transfers must land in the same step: a broadcast on a
+    ring fans out both ways, so the step count is ~p/2, not p (the old
+    schedule serialized every move, making FlowSim price a disjoint
+    schedule as a chain)."""
+    p = 8
+    topo = ring(p)
+    task = CommTask("syn", "broadcast", 2 ** 20, tuple(range(p)))
+    fs = synthesize(topo, task)
+    assert _delivered(task, fs)
+    assert len(fs.flows) == p - 1
+    assert fs.num_steps < len(fs.flows)
+    # both ring directions progress concurrently: some step carries > 1 flow
+    per_step = {}
+    for f in fs.flows:
+        per_step[f.step] = per_step.get(f.step, 0) + 1
+    assert max(per_step.values()) > 1
+    # a chunk can only move after the step that delivered it to its source
+    have_step = {task.group[0]: -1}
+    for f in sorted(fs.flows, key=lambda f: f.step):
+        assert f.src in have_step and have_step[f.src] < f.step
+        have_step[f.dst] = min(have_step.get(f.dst, f.step), f.step)
+
+
+def test_synthesis_asymmetric_sketch_reverse_edge():
+    """A sketch naming each physical link in one orientation only must
+    still synthesize (regression: tx_time KeyError when a shortest path
+    crossed a listed link against its listed orientation)."""
+    p = 6
+    topo = ring(p)
+    # list each physical link exactly once, in the u < v orientation
+    allowed = {(u, v) for u, v, _ in topo.links() if u < v}
+    task = CommTask("syn", "broadcast", 2 ** 18, tuple(range(p)))
+    fs = synthesize(topo, task, Sketch(allowed_links=allowed))
+    assert fs.flows and _delivered(task, fs)
+    # reverse-orientation traffic actually flows (counter-clockwise arm)
+    util = link_utilization(topo, fs)
+    assert any(u > v and b > 0 for (u, v), b in util.items())

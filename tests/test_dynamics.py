@@ -1,0 +1,337 @@
+"""Event-driven cluster dynamics: topology degradation views, the
+incremental re-planning loop, warm starts, and JSON persistence
+(paper Sec. V fault tolerance / elasticity)."""
+import json
+import math
+import os
+import sys
+
+import networkx as nx
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from repro.codesign import ClusterDynamics, DynamicsReport, Event, JobSpec
+from repro.codesign.cluster import ClusterReport
+from repro.configs import get_config
+from repro.core.demand_builder import DemandParams
+from repro.core.types import MeshConfig, SHAPES_BY_NAME
+from repro.net.topology import fat_tree
+
+DP2 = MeshConfig(shape=(2,), axis_names=("data",), data_axes=("data",),
+                 model_axes=())
+SHAPE = SHAPES_BY_NAME["train_4k"]
+DPP = DemandParams(zero1=False)
+CFG = get_config("qwen2-0.5b")
+
+
+def _job(name, devices):
+    return JobSpec(name, CFG, SHAPE, DP2, policy="serial", devices=devices,
+                   dp_params=DPP)
+
+
+def _small_cluster():
+    """Four single-GPU hosts, one per rack/pod, redundant agg tier: two
+    DP-2 tenants whose cross-pod routes share only the core links."""
+    topo = fat_tree(num_hosts=4, gpus_per_host=1, hosts_per_rack=1,
+                    racks_per_pod=1, agg_redundancy=2, nic_bw=2e9,
+                    agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    return [_job("a", (0, 2)), _job("b", (1, 3))], topo
+
+
+# ---------------------------------------------------------------------------
+# Event validation
+# ---------------------------------------------------------------------------
+
+
+def test_event_validation():
+    with pytest.raises(ValueError):
+        Event("meteor_strike")
+    # each kind demands its target field
+    with pytest.raises(ValueError):
+        Event("job_arrive")
+    with pytest.raises(ValueError):
+        Event("job_depart")
+    with pytest.raises(ValueError):
+        Event("link_fail")
+    with pytest.raises(ValueError):
+        Event("host_fail")
+    with pytest.raises(ValueError):
+        Event("straggler")
+    # factor ranges: degrade in (0, 1), straggle > 1
+    with pytest.raises(ValueError):
+        Event("link_degrade", link=("tor0", "agg0.0"), factor=1.5)
+    with pytest.raises(ValueError):
+        Event("link_degrade", link=("tor0", "agg0.0"), factor=0.0)
+    with pytest.raises(ValueError):
+        Event("straggler", name="a", factor=0.9)
+    assert Event("straggler", name="a", factor=2.0).target == "a"
+    assert Event("host_fail", host=3).target == "host3"
+    assert Event("link_fail", link=("tor0", "agg0")).target == "tor0->agg0"
+
+
+# ---------------------------------------------------------------------------
+# Topology degradation views (the network layer under the event loop)
+# ---------------------------------------------------------------------------
+
+
+def test_without_link_views():
+    topo = fat_tree(num_hosts=2, gpus_per_host=1, hosts_per_rack=1)
+    cut = topo.without_link("tor0", "agg0")
+    assert not cut.graph.has_edge("tor0", "agg0")
+    assert not cut.graph.has_edge("agg0", "tor0")
+    one_way = topo.without_link("tor0", "agg0", symmetric=False)
+    assert not one_way.graph.has_edge("tor0", "agg0")
+    assert one_way.graph.has_edge("agg0", "tor0")
+    # missing edges are ignored: stacked failures are idempotent
+    again = cut.without_link("tor0", "agg0")
+    assert set(again.graph.edges()) == set(cut.graph.edges())
+    # views are snapshots — the base is untouched
+    assert topo.graph.has_edge("tor0", "agg0")
+
+
+def test_without_host_view():
+    topo = fat_tree(num_hosts=3, gpus_per_host=2, hosts_per_rack=1)
+    dead = set(topo.hosts[1])
+    view = topo.without_host(1)
+    assert set(view.accelerators) == set(topo.accelerators) - dead
+    # surviving hosts keep relative order; indices shift
+    assert view.hosts == (topo.hosts[0], topo.hosts[2])
+    for d in dead:
+        assert d not in view.graph.nodes
+    with pytest.raises(ValueError):
+        topo.without_host(3)
+
+
+def test_scaled_bw_view():
+    topo = fat_tree(num_hosts=2, gpus_per_host=1, hosts_per_rack=1)
+    base = topo.graph["tor0"]["agg0"]["bw"]
+    # dict form scales both orientations of the named link only
+    view = topo.scaled_bw({("tor0", "agg0"): 0.5})
+    assert view.graph["tor0"]["agg0"]["bw"] == pytest.approx(base / 2)
+    assert view.graph["agg0"]["tor0"]["bw"] == pytest.approx(base / 2)
+    assert view.graph["tor1"]["agg0"]["bw"] == pytest.approx(base)
+    # scalar form scales every link
+    allhalf = topo.scaled_bw(0.5)
+    for u, v in topo.graph.edges():
+        assert allhalf.graph[u][v]["bw"] == \
+            pytest.approx(topo.graph[u][v]["bw"] / 2)
+    with pytest.raises(ValueError):
+        topo.scaled_bw({("tor0", "agg0"): 0.0})
+
+
+def test_fat_tree_agg_redundancy():
+    with pytest.raises(ValueError):
+        fat_tree(num_hosts=2, agg_redundancy=0)
+    # redundancy=1 keeps the legacy single-agg node names
+    legacy = fat_tree(num_hosts=2, gpus_per_host=1, hosts_per_rack=1)
+    assert "agg0" in legacy.graph.nodes
+    # redundancy=2: two parallel aggs per pod, per-uplink bw halved so
+    # pod capacity is unchanged
+    red = fat_tree(num_hosts=2, gpus_per_host=1, hosts_per_rack=1,
+                   agg_redundancy=2)
+    assert {"agg0.0", "agg0.1"} <= set(red.graph.nodes)
+    assert "agg0" not in red.graph.nodes
+    total = sum(red.graph["tor0"][f"agg0.{k}"]["bw"] for k in (0, 1))
+    assert total == pytest.approx(legacy.graph["tor0"]["agg0"]["bw"])
+    # the multi-path tier is the point: a single tor<->agg failure still
+    # leaves a path, where the legacy tree partitions
+    cut = red.without_link("tor0", "agg0.0")
+    assert nx.has_path(cut.graph, 0, 1)
+    legacy_cut = legacy.without_link("tor0", "agg0")
+    assert not nx.has_path(legacy_cut.graph, 0, 1)
+
+
+# ---------------------------------------------------------------------------
+# ClusterReport JSON persistence
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_report_json_round_trip():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    rep = dyn.report
+    wire = json.loads(json.dumps(rep.to_dict()))
+    back = ClusterReport.from_dict(wire, {s.name: s for s in jobs})
+    assert back.phases == rep.phases
+    assert back.staggered_jct == rep.staggered_jct
+    assert back.naive_jct == rep.naive_jct
+    assert list(back.contended) == list(rep.contended)
+    assert [jp.devices for jp in back.jobs] == \
+        [jp.devices for jp in rep.jobs]
+    assert back.jobs[0].profile == rep.jobs[0].profile
+    # specs are required by name — a missing one is an explicit error
+    with pytest.raises(ValueError, match="'b'"):
+        ClusterReport.from_dict(wire, {"a": jobs[0]})
+
+
+# ---------------------------------------------------------------------------
+# The event loop
+# ---------------------------------------------------------------------------
+
+
+def test_dynamics_rejects_duplicate_and_unknown_jobs():
+    jobs, topo = _small_cluster()
+    with pytest.raises(ValueError):
+        ClusterDynamics([jobs[0], jobs[0]], topo)
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    with pytest.raises(ValueError):
+        dyn.apply(Event("job_arrive", job=jobs[0]))  # already running
+    with pytest.raises(ValueError):
+        dyn.apply(Event("job_depart", name="ghost"))
+    with pytest.raises(ValueError):
+        dyn.apply(Event("straggler", name="ghost", factor=2.0))
+
+
+def test_straggler_is_incremental_and_local():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    before = dict(dyn.report.staggered_jct)
+    rec = dyn.apply(Event("straggler", name="a", factor=1.5))
+    assert rec.mode == "incremental"
+    assert rec.dirty_jobs == ["a"]
+    # a's compute stretches; b is untouched by a compute-side slowdown
+    assert dyn.report.staggered_jct["a"] > before["a"] * 1.2
+    assert dyn.report.staggered_jct["b"] == pytest.approx(before["b"],
+                                                          rel=0.05)
+    # straggle factors compound
+    rec2 = dyn.apply(Event("straggler", name="a", factor=1.5))
+    assert dyn.report.staggered_jct["a"] > before["a"] * 1.8
+
+
+def test_arrival_and_departure():
+    base = fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=1,
+                    racks_per_pod=1, agg_redundancy=2, nic_bw=2e9,
+                    agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    dyn = ClusterDynamics([_job("a", (0, 4))], base, grid=4)
+    rec = dyn.apply(Event("job_arrive", job=_job("c", (1, 5))))
+    assert rec.mode == "incremental"
+    assert set(dyn.report.staggered_jct) == {"a", "c"}
+    # the arrival shares a's uplinks, so a's phase was re-opened too
+    assert set(rec.dirty_jobs) == {"a", "c"}
+    rec = dyn.apply(Event("job_depart", name="c"))
+    assert set(dyn.report.staggered_jct) == {"a"}
+    assert "c" not in dyn.specs
+    # departing frees the shared links: the survivor is re-staggered
+    assert rec.dirty_jobs == ["a"]
+
+
+def test_link_fail_reroutes_on_redundant_tree():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    before = dict(dyn.report.staggered_jct)
+    rec = dyn.apply(Event("link_fail", link=("tor0", "agg0.0")))
+    # job a routes through pod 0; b (pods 1/3) is clean
+    assert rec.dirty_jobs == ["a"]
+    assert all(math.isfinite(v)
+               for v in dyn.report.staggered_jct.values())
+    # half the uplink capacity is gone: a cannot get faster
+    assert dyn.report.staggered_jct["a"] >= before["a"] * 0.999
+
+
+def test_link_degrade_compounds():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    dyn.apply(Event("link_degrade", link=("tor0", "agg0.0"), factor=0.5))
+    dyn.apply(Event("link_degrade", link=("tor0", "agg0.0"), factor=0.5))
+    assert dyn.bw_scale[("tor0", "agg0.0")] == pytest.approx(0.25)
+    assert dyn._view().graph["tor0"]["agg0.0"]["bw"] == \
+        pytest.approx(topo.graph["tor0"]["agg0.0"]["bw"] * 0.25)
+
+
+def test_host_fail_recarves_onto_survivors():
+    topo = fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=1,
+                    racks_per_pod=1, agg_redundancy=2, nic_bw=2e9,
+                    agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    dyn = ClusterDynamics([_job("a", (0, 4)), _job("b", (2, 6))], topo,
+                          grid=4)
+    dead = set(topo.hosts[2])      # devices {4, 5} — a loses device 4
+    rec = dyn.apply(Event("host_fail", host=2))
+    assert "a" in rec.dirty_jobs
+    new_devs = {jp.spec.name: set(jp.devices) for jp in dyn.report.jobs}
+    assert not new_devs["a"] & dead          # re-carved off the dead host
+    assert new_devs["b"] == {2, 6}           # clean job keeps its pin
+    assert not new_devs["a"] & new_devs["b"]
+    assert all(math.isfinite(v)
+               for v in dyn.report.staggered_jct.values())
+
+
+def test_host_fail_evicts_lifo_when_cluster_too_small():
+    jobs, topo = _small_cluster()   # 4 single-GPU hosts, 2 DP-2 jobs
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    rec = dyn.apply(Event("host_fail", host=3))   # 3 devices left for 4
+    assert rec.mode == "full"
+    assert rec.evicted == ["b"]     # most recently arrived goes first
+    assert set(dyn.specs) == {"a"}
+    assert set(dyn.report.staggered_jct) == {"a"}
+
+
+def test_warm_start_from_persisted_report():
+    jobs, topo = _small_cluster()
+    fresh = ClusterDynamics(jobs, topo, grid=4)
+    wire = json.loads(json.dumps(fresh.report.to_dict()))
+    warmed = ClusterDynamics(jobs, topo, grid=4, warm_start=wire)
+    assert warmed.report.staggered_jct == fresh.report.staggered_jct
+    # both engines evolve identically from the shared standing plan
+    ev = Event("straggler", name="b", factor=1.4)
+    r1, r2 = fresh.apply(ev), warmed.apply(ev)
+    assert r1.mode == r2.mode == "incremental"
+    for name in r1.jct:
+        assert r1.jct[name] == pytest.approx(r2.jct[name], rel=1e-6)
+
+
+def test_compare_full_bounds_regret():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4, compare_full=True)
+    rep = dyn.run([Event("straggler", time=1.0, name="a", factor=1.3),
+                   Event("link_degrade", time=2.0,
+                         link=("tor0", "agg0.0"), factor=0.5)])
+    assert len(rep.records) == 2
+    assert rep.incremental_speedup is not None
+    assert rep.worst_regret is not None and rep.worst_regret <= 0.05
+    assert rep.mean_replan_s > 0
+
+
+def test_dynamics_report_json_round_trip():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4, compare_full=True)
+    rep = dyn.run([Event("link_fail", time=1.0, link=("tor2", "agg2.1")),
+                   Event("straggler", time=2.0, name="b", factor=2.0)])
+    wire = json.loads(json.dumps(rep.to_dict()))
+    back = DynamicsReport.from_dict(wire, {s.name: s for s in jobs})
+    assert [r.kind for r in back.records] == [r.kind for r in rep.records]
+    for r1, r2 in zip(back.records, rep.records):
+        assert r1.target == r2.target and r1.mode == r2.mode
+        assert r1.dirty_links == r2.dirty_links
+        assert r1.jct == r2.jct and r1.regret == r2.regret
+    assert back.final.staggered_jct == rep.final.staggered_jct
+    assert back.incremental_speedup == \
+        pytest.approx(rep.incremental_speedup)
+
+
+def test_events_applied_in_time_order():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    rep = dyn.run([Event("straggler", time=5.0, name="a", factor=1.2),
+                   Event("job_depart", time=1.0, name="b")])
+    assert [r.kind for r in rep.records] == ["job_depart", "straggler"]
+
+
+def test_bench_trace_stays_incremental():
+    """The benchmark's 8-event trace (arrival, stragglers, degrade, fail,
+    depart, host loss) never needs the full-search fallback, and every
+    standing plan along the way is finite."""
+    from benchmarks.paper_claims import _dynamic_cluster
+    jobs, topo, events = _dynamic_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    rep = dyn.run(events)
+    assert len(rep.records) == 8
+    assert all(r.mode == "incremental" for r in rep.records)
+    for r in rep.records:
+        assert all(math.isfinite(v) for v in r.jct.values())
+    # the trace's net effect: E arrived, B departed, host 2 took A's and
+    # E's devices — everyone still placed on live hardware
+    assert set(rep.final.staggered_jct) == {"jobA", "jobC", "jobD", "jobE"}
+    dead = set(topo.hosts[2])
+    for jp in rep.final.jobs:
+        assert not set(jp.devices) & dead
