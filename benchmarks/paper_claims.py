@@ -8,10 +8,11 @@ cost/simulation models (EXPERIMENTS.md §Paper-claims records the comparison).
 """
 from __future__ import annotations
 
+import json
 import math
 import os
 import sys
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -726,8 +727,20 @@ np.testing.assert_allclose(np.asarray(y2), np.asarray(x2 @ w2), atol=1e-4)
 print("OK")
 """
 
+# Measured-vs-modeled collective probes on 8 forced host devices
+# (repro.obs.probe): the subprocess serializes its probes back over
+# stdout so the smoke run can lay measured tracks into the same trace.
+_PROBE_SUITE = """
+import json
+from repro.obs.probe import probe_suite
+probes = probe_suite(impls=("ring", "bidir_ring"), sizes=(1 << 14, 1 << 16),
+                     repeats=2, warmup=1)
+print("PROBES=" + json.dumps([p.to_dict() for p in probes]))
+print("OK")
+"""
 
-def run_smoke() -> None:
+
+def run_smoke(trace_out: Optional[str] = None) -> None:
     """Assert the headline claim *orderings* on tiny inputs — fast enough
     for a CI step, so paper-claim regressions fail PRs, not just the
     nightly benchmark run."""
@@ -899,6 +912,51 @@ def run_smoke() -> None:
           f"dirty={fail_rec.dirty_jobs} "
           f"worst_stretch={fail_rec.worst_stretch:.3f}")
 
+    # 9. Observability: search telemetry accounts for every candidate,
+    # FlowSim memoization carries the overlap search (fixed placement ->
+    # repeated task keys), and one smoke trace — the searched overlap
+    # plan + per-link counters + measured-collective probe tracks —
+    # exports as valid Chrome Trace Event JSON (ores/obase are the
+    # flowsim leg of check 6)
+    from repro.obs.trace import validate_chrome
+    tel = ores.telemetry
+    check("search telemetry accounts for every candidate",
+          tel.get("plan_evals", 0) >= 10
+          and tel.get("plan_evals") == len(ores.frontier),
+          f"{tel.get('plan_evals')} candidates, "
+          f"{tel.get('memo_hits')} memo hits")
+    check("FlowSim memoization carries the overlap search (hit rate >= 0.5)",
+          tel.get("flowsim_cost_hit_rate", 0.0) >= 0.5,
+          f"hit rate {tel.get('flowsim_cost_hit_rate', 0.0):.2f} over "
+          f"{tel.get('charged_evals')} plans")
+    trace = ores.to_trace(topo=obase.topo)
+    try:
+        probe_out = run_multidevice(_PROBE_SUITE, num_devices=8)
+    except AssertionError as e:
+        probe_out = None
+        check("measured-collective probes on 8 forced devices", False,
+              str(e).splitlines()[0])
+    if probe_out is not None:
+        from repro.obs.probe import (CollectiveProbe, model_vs_measured,
+                                     probes_to_trace)
+        probes = [CollectiveProbe.from_dict(d) for d in json.loads(
+            next(l for l in probe_out.splitlines()
+                 if l.startswith("PROBES="))[len("PROBES="):])]
+        probes_to_trace(probes, trace=trace)
+        mm = model_vs_measured(probes)
+        check("measured-collective probes on 8 forced devices",
+              mm["count"] >= 4
+          and all(r["measured_s"] > 0 for r in mm["rows"]),
+              f"{mm['count']} probes, geomean measured/modeled "
+              f"{mm.get('geomean_ratio', 0.0):.3g}x")
+    problems = validate_chrome(trace.to_chrome())
+    check("smoke trace is valid Chrome Trace Event JSON", not problems,
+          f"{len(trace.to_chrome()['traceEvents'])} events"
+          if not problems else "; ".join(problems[:2]))
+    if trace_out:
+        os.makedirs(os.path.dirname(trace_out) or ".", exist_ok=True)
+        print(f"  trace -> {trace.write(trace_out)}")
+
     failed = [c for c in checks if not c[1]]
     print(f"smoke: {len(checks) - len(failed)}/{len(checks)} orderings hold")
     if failed:
@@ -911,9 +969,14 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="assert key claim orderings on tiny shapes (CI)")
+    ap.add_argument("--trace-out", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments",
+        "smoke.trace.json"),
+        help="where --smoke writes its Perfetto trace "
+             "(empty string disables)")
     args = ap.parse_args()
     if args.smoke:
-        run_smoke()
+        run_smoke(trace_out=args.trace_out or None)
         return
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     from benchmarks.run import main as run_all

@@ -23,13 +23,24 @@ ARCH_ORDER = ["granite-3-8b", "mamba2-130m", "h2o-danube-1.8b",
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 
 
-def load(mesh: str):
+def _rank(order, key):
+    """Sort rank within a preferred ordering: known entries keep their
+    position, unknown ones (new arch/shape result files) sort to the end
+    alphabetically instead of crashing ``list.index``."""
+    try:
+        return (order.index(key), key)
+    except ValueError:
+        return (len(order), key)
+
+
+def load(mesh: str, results_dir: str = None):
     rows = []
-    for f in glob.glob(os.path.join(RESULTS_DIR, f"*_{mesh}.json")):
+    for f in glob.glob(os.path.join(results_dir or RESULTS_DIR,
+                                    f"*_{mesh}.json")):
         with open(f) as fh:
             rows.append(json.load(fh))
-    rows.sort(key=lambda r: (ARCH_ORDER.index(r["arch"]),
-                             SHAPE_ORDER.index(r["shape"])))
+    rows.sort(key=lambda r: (_rank(ARCH_ORDER, r["arch"]),
+                             _rank(SHAPE_ORDER, r["shape"])))
     return rows
 
 

@@ -139,3 +139,33 @@ def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
         if algorithm == "ring":
             return (p - 1) * a + (p - 1) / p * n / b
     raise KeyError(f"no cost model for {primitive}/{algorithm}")
+
+
+def cost_terms(primitive: str, algorithm: str, size_bytes: int, p: int,
+               cp: CostParams) -> dict:
+    """:func:`algo_cost` split into its alpha-beta terms:
+    ``{"latency_s", "bandwidth_s", "codec_s", "total_s"}``.
+
+    The latency term is the size-0 cost of the (base) algorithm, the
+    bandwidth term what payload adds on the wire, and ``codec_s`` the
+    compressed candidates' encode/decode overhead (0 for lossless).
+    This is the model-side breakdown ``repro.obs.probe`` puts next to
+    measured wall-clock spans, so calibration can see *which* term
+    drifts."""
+    total = algo_cost(primitive, algorithm, size_bytes, p, cp)
+    if p <= 1:
+        return {"latency_s": 0.0, "bandwidth_s": 0.0, "codec_s": 0.0,
+                "total_s": 0.0}
+    if "+" in algorithm:
+        from repro.compress.codec import (base_algorithm, codec_spec,
+                                          split_algorithm)
+        base = base_algorithm(algorithm)
+        _, codec_name = split_algorithm(algorithm)
+        lat = algo_cost(primitive, base, 0, p, cp)
+        full = algo_cost(primitive, base, size_bytes, p, cp)
+        bw = (full - lat) * codec_spec(codec_name).wire_ratio
+        return {"latency_s": lat, "bandwidth_s": bw,
+                "codec_s": total - lat - bw, "total_s": total}
+    lat = algo_cost(primitive, algorithm, 0, p, cp)
+    return {"latency_s": lat, "bandwidth_s": total - lat, "codec_s": 0.0,
+            "total_s": total}

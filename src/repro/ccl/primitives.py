@@ -222,6 +222,18 @@ IMPLEMENTATIONS: dict = {
     "ring_q4": functools.partial(compressed_ring_all_reduce, bits=4),
 }
 
+# executable implementation -> the algorithm name the cost models price
+# it as (``ccl.cost.algo_cost`` / the selection registry), so measured
+# wall-clock spans (``repro.obs.probe``) line up against the right
+# model-predicted spans
+MODEL_EQUIVALENTS: dict = {
+    "ring": "ring",
+    "bidir_ring": "bidir_ring",
+    "recursive_doubling": "halving_doubling",
+    "ring_q8": "ring+q8",
+    "ring_q4": "ring+q4",
+}
+
 
 def make_all_reduce(impl: str, mesh, axis_name: str) -> Callable:
     """Wrap an implementation as a jitted global-array function."""

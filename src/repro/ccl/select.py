@@ -49,6 +49,7 @@ from repro.compress.codec import (SPECS, base_algorithm, codec_spec,
                                   split_algorithm)
 from repro.core.demand import CommTask, FlowSet
 from repro.core.knobs import Choice, Fixed, Knob, Search
+from repro.obs.meters import Meters
 from repro.net.simulate import simulate_flowset
 from repro.net.topology import Topology
 from repro.sched.atp import aggregation_switches
@@ -222,16 +223,35 @@ class FlowSim:
     passes at ``codec_bw`` bytes/s (same model as ``CostParams``)."""
 
     def __init__(self, topo: Topology, switch_capacity: Optional[int] = None,
-                 codec_bw: float = 200e9, codec_alpha: float = 2e-6):
+                 codec_bw: float = 200e9, codec_alpha: float = 2e-6,
+                 meters: Optional[Meters] = None):
         self.topo = topo
         self.switch_capacity = switch_capacity
         self.codec_bw = codec_bw
         self.codec_alpha = codec_alpha
         self._cost_memo: Dict[Tuple, float] = {}
         self._flow_memo: Dict[Tuple, FlowSet] = {}
+        # memoization telemetry (repro.obs): counter names carry the
+        # switch-capacity bucket since one FlowSim exists per aggregation
+        # budget, so merged snapshots keep the buckets apart
+        self.meters = meters if meters is not None else Meters()
+        self._bucket = f"flowsim[cap={switch_capacity}]"
 
     def _key(self, task: CommTask, algorithm: str) -> Tuple:
         return (task.primitive, algorithm, task.size_bytes, task.group)
+
+    def cache_stats(self) -> Dict[str, float]:
+        """This model's memoization counters plus the hit rates (the
+        headline numbers ``search()`` telemetry floors on)."""
+        m = self.meters
+        out = m.snapshot()
+        for kind in ("cost", "flow"):
+            rate = m.ratio(f"{self._bucket}.{kind}.hit",
+                           f"{self._bucket}.{kind}.miss")
+            if rate is not None:
+                out[f"{self._bucket}.{kind}.hit_rate"] = rate
+        out[f"{self._bucket}.cost.entries"] = float(len(self._cost_memo))
+        return out
 
     def supports(self, task: CommTask, algorithm: str) -> bool:
         base = base_algorithm(algorithm)  # compressed names inherit base's
@@ -246,26 +266,32 @@ class FlowSim:
     def flowset(self, task: CommTask, algorithm: str) -> FlowSet:
         key = self._key(task, algorithm)
         if key not in self._flow_memo:
+            self.meters.incr(f"{self._bucket}.flow.miss")
             self._flow_memo[key] = flows_on_topology(
                 self.topo, task, algorithm)
+        else:
+            self.meters.incr(f"{self._bucket}.flow.hit")
         return self._flow_memo[key]
 
     def cost(self, task: CommTask, algorithm: str) -> float:
         key = self._key(task, algorithm)
-        if key not in self._cost_memo:
-            agg = None
-            if base_algorithm(algorithm) == "atp":
-                agg = aggregation_switches(self.topo, task.group,
-                                           self.switch_capacity)
-            fs = self.flowset(task, algorithm)
-            t = simulate_flowset(self.topo, fs, aggregate_at=agg)
-            _, codec = split_algorithm(algorithm)
-            if codec is not None:
-                spec = codec_spec(codec)
-                t += fs.num_steps * self.codec_alpha \
-                    + spec.passes * task.size_bytes / self.codec_bw
-            self._cost_memo[key] = t
-        return self._cost_memo[key]
+        if key in self._cost_memo:
+            self.meters.incr(f"{self._bucket}.cost.hit")
+            return self._cost_memo[key]
+        self.meters.incr(f"{self._bucket}.cost.miss")
+        agg = None
+        if base_algorithm(algorithm) == "atp":
+            agg = aggregation_switches(self.topo, task.group,
+                                       self.switch_capacity)
+        fs = self.flowset(task, algorithm)
+        t = simulate_flowset(self.topo, fs, aggregate_at=agg)
+        _, codec = split_algorithm(algorithm)
+        if codec is not None:
+            spec = codec_spec(codec)
+            t += fs.num_steps * self.codec_alpha \
+                + spec.passes * task.size_bytes / self.codec_bw
+        self._cost_memo[key] = t
+        return t
 
 
 def flows_on_topology(topo: Topology, task: CommTask,

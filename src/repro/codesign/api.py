@@ -377,7 +377,8 @@ def plan(problem: CodesignProblem,
         choices=[choices[t.task_id] for t in placed.comm_tasks],
         link_hotspots=hotspots, sim=sim,
         error_budget=error_budget, wire_bytes_saved=bytes_saved,
-        task_exposed_s=dict(sim.task_exposed_s))
+        task_exposed_s=dict(sim.task_exposed_s),
+        timeline=list(sim.timeline))
 
 
 # ---------------------------------------------------------------------------
@@ -409,7 +410,9 @@ def _assignment_from_json(d: Mapping) -> Dict[str, object]:
 class Candidate:
     """One explored point of the plan space.  Only the search winner
     keeps its full ``report`` (and live sim trace); runners-up carry the
-    headline metrics and their knob assignment."""
+    headline metrics, their knob assignment, and the per-candidate
+    telemetry record (which search phase priced it, why it was ruled
+    infeasible, how often deduplication re-served it)."""
 
     assignment: Dict[str, object]
     jct: float
@@ -418,6 +421,12 @@ class Candidate:
     feasible: bool
     report: Optional[CodesignReport] = None
     key: Optional[Tuple[float, ...]] = None  # objective key, not serialized
+    # telemetry (repro.obs): infeasibility reason (None = feasible),
+    # which search phase first priced this point, and how many times the
+    # walk asked for it (1 = priced once, >1 = memo re-served)
+    reason: Optional[str] = None
+    phase: str = "sweep"
+    requests: int = 1
 
     def to_dict(self) -> Dict:
         return {
@@ -426,6 +435,8 @@ class Candidate:
             "jct": self.jct, "exposed_comm": self.exposed_comm,
             "worst_link_bytes": self.worst_link_bytes,
             "feasible": self.feasible,
+            "reason": self.reason, "phase": self.phase,
+            "requests": self.requests,
         }
 
     @classmethod
@@ -433,7 +444,9 @@ class Candidate:
         return cls(assignment=_assignment_from_json(d["assignment"]),
                    jct=d["jct"], exposed_comm=d["exposed_comm"],
                    worst_link_bytes=d["worst_link_bytes"],
-                   feasible=d["feasible"], report=None)
+                   feasible=d["feasible"], report=None,
+                   reason=d.get("reason"), phase=d.get("phase", "sweep"),
+                   requests=d.get("requests", 1))
 
 
 @dataclass
@@ -450,6 +463,10 @@ class SearchResult:
     evaluated: int
     budget: int
     truncated: bool = False  # budget ran out before the walk finished
+    # search telemetry (repro.obs.meters): plan evaluations, memo
+    # re-serves, and the cost models' cache counters (FlowSim hit/miss
+    # per switch-capacity bucket + hit rates)
+    telemetry: Dict[str, object] = field(default_factory=dict)
 
     @property
     def best_jct(self) -> float:
@@ -464,6 +481,7 @@ class SearchResult:
             "attribution": dict(self.attribution),
             "evaluated": self.evaluated, "budget": self.budget,
             "truncated": self.truncated,
+            "telemetry": dict(self.telemetry),
         }
 
     @classmethod
@@ -474,7 +492,15 @@ class SearchResult:
                    frontier=[Candidate.from_dict(c) for c in d["frontier"]],
                    attribution=dict(d["attribution"]),
                    evaluated=d["evaluated"], budget=d["budget"],
-                   truncated=d["truncated"])
+                   truncated=d["truncated"],
+                   telemetry=dict(d.get("telemetry", {})))
+
+    def to_trace(self, topo=None, **kw):
+        """This search as a Perfetto trace: the winner's full tracks plus
+        the frontier/telemetry on a search process
+        (``repro.obs.trace.trace_from_search``)."""
+        from repro.obs.trace import trace_from_search
+        return trace_from_search(self.to_dict(), topo=topo, **kw)
 
 
 def _bucket_candidates(problem: CodesignProblem,
@@ -570,22 +596,30 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
     objective = problem.objective
     seen: Dict[Tuple, Candidate] = {}
     order: List[Candidate] = []
-    state = {"evaluated": 0}
+    state = {"evaluated": 0, "memo_hits": 0}
 
-    def evaluate(assignment: Dict[str, object],
-                 charge: bool = True) -> Candidate:
+    def evaluate(assignment: Dict[str, object], charge: bool = True,
+                 phase: str = "sweep") -> Candidate:
         key = tuple((n, _canon(assignment[n])) for n in sorted(assignment))
         if key in seen:
-            return seen[key]
+            cand = seen[key]
+            cand.requests += 1
+            state["memo_hits"] += 1
+            return cand
         values = dict(pinned)
         values.update(assignment)
         prob = problem.pinned(**values)
         report = plan(prob, _resolved=model_for(values["switch_capacity"]))
+        feasible = objective.feasible(report)
+        reason = None if feasible else (
+            f"worst_link_bytes {report.worst_link_bytes:.6g} > "
+            f"{objective.max_worst_link_bytes:.6g}")
         cand = Candidate(assignment=dict(assignment), jct=report.jct,
                          exposed_comm=report.exposed_comm,
                          worst_link_bytes=report.worst_link_bytes,
-                         feasible=objective.feasible(report), report=report,
-                         key=objective.key(report))
+                         feasible=feasible, report=report,
+                         key=objective.key(report), reason=reason,
+                         phase=phase)
         seen[key] = cand
         order.append(cand)
         if charge:
@@ -640,7 +674,8 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
                     truncated = True
                     break
                 prev = best
-                consider(evaluate({**best.assignment, "placement": nb}))
+                consider(evaluate({**best.assignment, "placement": nb},
+                                  phase="hillclimb"))
                 if best is not prev:
                     improved = True
                     break
@@ -667,7 +702,7 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
             attribution[name] = 0.0
             continue
         reverted = evaluate({**best.assignment, name: base_value},
-                            charge=False)
+                            charge=False, phase="baseline")
         attribution[name] = reverted.jct - best.jct
         if reverted is not best:
             reverted.report = None
@@ -676,4 +711,34 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
     return SearchResult(
         best=best.report, best_assignment=dict(best.assignment),
         frontier=frontier, attribution=attribution,
-        evaluated=state["evaluated"], budget=budget, truncated=truncated)
+        evaluated=state["evaluated"], budget=budget, truncated=truncated,
+        telemetry=_search_telemetry(state, order, models))
+
+
+def _search_telemetry(state: Dict, order: List[Candidate],
+                      models: Dict) -> Dict[str, object]:
+    """The walk's deterministic counters (``repro.obs``): how many plans
+    were priced vs re-served from the assignment memo, the feasibility
+    split, and the cost models' cache counters — FlowSim hit/miss per
+    switch-capacity bucket plus an overall cost-memo hit rate."""
+    counters: Dict[str, float] = {}
+    for model, _name in models.values():
+        stats = getattr(model, "cache_stats", None)
+        if stats is None:
+            continue
+        # bucket-labelled keys are disjoint across models (one FlowSim
+        # per switch capacity), so a plain merge keeps buckets apart
+        counters.update(stats())
+    hits = sum(v for k, v in counters.items() if k.endswith(".cost.hit"))
+    misses = sum(v for k, v in counters.items()
+                 if k.endswith(".cost.miss"))
+    out: Dict[str, object] = {
+        "plan_evals": len(order),
+        "charged_evals": state["evaluated"],
+        "memo_hits": state["memo_hits"],
+        "infeasible": sum(1 for c in order if not c.feasible),
+        "counters": {k: counters[k] for k in sorted(counters)},
+    }
+    if hits + misses > 0:
+        out["flowsim_cost_hit_rate"] = hits / (hits + misses)
+    return out

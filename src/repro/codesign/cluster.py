@@ -232,6 +232,14 @@ class ClusterReport:
                                  for k, f in dem.items()}
                           for name, dem in d["link_demands"].items()})
 
+    def to_trace(self, topo=None, **kw):
+        """The cluster plan as a Perfetto trace: one process group per
+        tenant, each tenant's iteration tracks shifted by its staggered
+        phase, contended links on a cluster process
+        (``repro.obs.trace.trace_from_cluster``)."""
+        from repro.obs.trace import trace_from_cluster
+        return trace_from_cluster(self.to_dict(), topo=topo, **kw)
+
 
 def _carve_devices(jobs: Sequence[JobSpec], topo: Topology
                    ) -> List[Tuple[int, ...]]:
@@ -298,14 +306,16 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
                  grid: int = 8, horizon_iters: int = 12,
                  dt: Optional[float] = None,
                  switch_capacity: Optional[int] = None,
-                 max_contended_links: int = 8) -> ClusterReport:
+                 max_contended_links: int = 8,
+                 meters=None) -> ClusterReport:
     """Plan N jobs sharing one physical cluster and stagger their phases.
 
     ``dt`` is the flow scheduler's time step (None = 1/400 of the shortest
     job period); ``grid`` the CASSINI phase-search resolution;
     ``max_contended_links`` bounds the per-job demand maps to the hottest
     shared links so the phase search stays cheap.  ``switch_capacity``
-    (ATP) is forwarded to per-job selection."""
+    (ATP) is forwarded to per-job selection.  ``meters``
+    (``repro.obs.meters``) counts the phase-search evaluations."""
     if not jobs:
         raise ValueError("plan_cluster needs at least one JobSpec")
     names = [s.name for s in jobs]
@@ -327,7 +337,7 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
     return _stagger_plans(plans, topo, grid=grid,
                           horizon_iters=horizon_iters, dt=dt,
                           max_contended_links=max_contended_links,
-                          cost_model=model_name)
+                          cost_model=model_name, meters=meters)
 
 
 def _detect_contention(plans: Sequence[JobPlan], topo: Topology,
@@ -361,7 +371,8 @@ def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
                    horizon_iters: int, dt: Optional[float],
                    max_contended_links: int, cost_model: str,
                    phases: Optional[Dict[str, float]] = None,
-                   dirty: Optional[Sequence[str]] = None) -> ClusterReport:
+                   dirty: Optional[Sequence[str]] = None,
+                   meters=None) -> ClusterReport:
     """The horizontal layer's back half: contention detection -> demand
     maps -> phase search.  With ``phases``/``dirty`` given, only the
     dirty jobs' phases are searched (the rest stay frozen — incremental
@@ -386,7 +397,7 @@ def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
     if phases is None:
         best_phases, naive, staggered = stagger_jobs(
             profiles, grid=grid, link_demands=link_demands,
-            horizon_iters=horizon_iters, dt=dt)
+            horizon_iters=horizon_iters, dt=dt, meters=meters)
     else:
         current = [phases.get(n, 0.0) for n in names]
         dirty_set = set(names if dirty is None else dirty)
@@ -398,7 +409,8 @@ def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
             free = free[1:]
         best_phases, naive, staggered = restagger_jobs(
             profiles, current, free, grid=grid,
-            link_demands=link_demands, horizon_iters=horizon_iters, dt=dt)
+            link_demands=link_demands, horizon_iters=horizon_iters, dt=dt,
+            meters=meters)
     return ClusterReport(
         jobs=plans, contended=contended,
         phases=dict(zip(names, best_phases)),
@@ -413,7 +425,8 @@ def restagger_cluster(plans: List[JobPlan], topo: Topology,
                       dirty: Sequence[str], grid: int = 8,
                       horizon_iters: int = 12, dt: Optional[float] = None,
                       max_contended_links: int = 8,
-                      cost_model: str = "flowsim") -> ClusterReport:
+                      cost_model: str = "flowsim",
+                      meters=None) -> ClusterReport:
     """Incrementally re-stagger a cluster plan: jobs named in ``dirty``
     get fresh phase offsets, everyone else keeps ``phases``.  This is
     the horizontal half of event-driven re-planning — contention is
@@ -436,4 +449,4 @@ def restagger_cluster(plans: List[JobPlan], topo: Topology,
                           horizon_iters=horizon_iters, dt=dt,
                           max_contended_links=max_contended_links,
                           cost_model=cost_model, phases=phases,
-                          dirty=dirty)
+                          dirty=dirty, meters=meters)

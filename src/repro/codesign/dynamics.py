@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 import networkx as nx
 
 from repro.net.topology import Topology
+from repro.obs.meters import Meters
 from repro.codesign.api import plan
 from repro.codesign.cluster import (ClusterReport, JobPlan, JobSpec,
                                     _carve_devices, _job_profile,
@@ -158,6 +159,9 @@ class DynamicsReport:
 
     records: List[EventRecord]
     final: ClusterReport
+    # engine telemetry (``repro.obs.meters`` snapshot): replan-mode
+    # tallies, dirty-set sizes, phase-search evaluation counts
+    telemetry: Dict[str, float] = field(default_factory=dict)
 
     @property
     def incremental_speedup(self) -> Optional[float]:
@@ -185,13 +189,22 @@ class DynamicsReport:
 
     def to_dict(self) -> Dict:
         return {"records": [r.to_dict() for r in self.records],
-                "final": self.final.to_dict()}
+                "final": self.final.to_dict(),
+                "telemetry": dict(self.telemetry)}
 
     @classmethod
     def from_dict(cls, d: Dict, specs: Dict[str, JobSpec]
                   ) -> "DynamicsReport":
         return cls(records=[EventRecord.from_dict(r) for r in d["records"]],
-                   final=ClusterReport.from_dict(d["final"], specs))
+                   final=ClusterReport.from_dict(d["final"], specs),
+                   telemetry=dict(d.get("telemetry", {})))
+
+    def to_trace(self, topo=None, **kw):
+        """The whole trace as a Perfetto timeline: event/replan/stretch
+        tracks for the dynamics run plus the final cluster plan's per-job
+        timelines (``repro.obs.trace.trace_from_dynamics``)."""
+        from repro.obs.trace import trace_from_dynamics
+        return trace_from_dynamics(self.to_dict(), topo=topo, **kw)
 
 
 def _respec(spec: JobSpec, devices: Optional[Tuple[int, ...]]) -> JobSpec:
@@ -221,7 +234,8 @@ class ClusterDynamics:
                  horizon_iters: int = 12, dt: Optional[float] = None,
                  switch_capacity: Optional[int] = None,
                  max_contended_links: int = 8, compare_full: bool = False,
-                 warm_start: Optional[Union[ClusterReport, Dict]] = None):
+                 warm_start: Optional[Union[ClusterReport, Dict]] = None,
+                 clock=time.perf_counter):
         names = [s.name for s in jobs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate job names: {names}")
@@ -233,6 +247,10 @@ class ClusterDynamics:
         self.switch_capacity = switch_capacity
         self.max_contended_links = max_contended_links
         self.compare_full = compare_full
+        # injectable clock: tests pass a fake counter to make ``replan_s``
+        # / ``full_replan_s`` deterministic; the obs meters share it
+        self.clock = clock
+        self.meters = Meters(clock=clock)
         self.specs: Dict[str, JobSpec] = {s.name: s for s in jobs}
         self.failed_hosts: Set[int] = set()
         self.failed_links: Set[Tuple] = set()
@@ -316,7 +334,8 @@ class ClusterDynamics:
         rep = _stagger_plans(plans, view, grid=self.grid,
                              horizon_iters=self.horizon_iters, dt=self.dt,
                              max_contended_links=self.max_contended_links,
-                             cost_model=plans[0].report.cost_model)
+                             cost_model=plans[0].report.cost_model,
+                             meters=getattr(self, "meters", None))
         return rep, evicted
 
     def _rebuild_plans(self, view: Topology, vertical: Set[str]
@@ -420,7 +439,7 @@ class ClusterDynamics:
         phase_dirty |= vertical
 
         view = self._view()
-        t0 = time.perf_counter()
+        t0 = self.clock()
         report: Optional[ClusterReport] = None
         evicted: List[str] = []
         mode = "incremental"
@@ -441,7 +460,8 @@ class ClusterDynamics:
                     grid=self.grid, horizon_iters=self.horizon_iters,
                     dt=self.dt,
                     max_contended_links=self.max_contended_links,
-                    cost_model=self.report.cost_model)
+                    cost_model=self.report.cost_model,
+                    meters=self.meters)
             except (ValueError, KeyError, nx.NetworkXException):
                 report = None
             if report is not None and any(
@@ -456,16 +476,25 @@ class ClusterDynamics:
                     self.straggle.pop(n, None)
         else:
             report = self._empty_report()
-        replan_s = time.perf_counter() - t0
+        replan_s = self.clock() - t0
 
         full_s = regret = None
         if self.compare_full and mode == "incremental" and self.specs:
-            t1 = time.perf_counter()
+            t1 = self.clock()
             full_rep, _ = self._plan_full(view)
-            full_s = time.perf_counter() - t1
+            full_s = self.clock() - t1
             if report.jobs and full_rep.jobs:
                 regret = (report.staggered_worst_stretch
                           / full_rep.staggered_worst_stretch - 1.0)
+
+        self.meters.incr(f"dynamics.mode.{mode}")
+        self.meters.incr(f"dynamics.event.{ev.kind}")
+        self.meters.observe("dynamics.dirty_jobs",
+                            float(len(phase_dirty & set(self.specs))))
+        self.meters.observe("dynamics.dirty_links",
+                            float(len(dirty_links)))
+        if evicted:
+            self.meters.incr("dynamics.evictions", float(len(evicted)))
 
         self.report = report
         rec = EventRecord(
@@ -485,4 +514,5 @@ class ClusterDynamics:
         for ev in sorted(events, key=lambda e: e.time):
             self.apply(ev)
         return DynamicsReport(records=list(self.records),
-                              final=self.report)
+                              final=self.report,
+                              telemetry=self.meters.snapshot())

@@ -6,7 +6,9 @@ it).  Both serialize to plain JSON — placements as device lists, link
 hot spots as ``"u->v"`` string keys — so ``experiments/`` and
 ``benchmarks/`` can persist plans, and round-trip back via
 ``from_dict`` (the live ``SimResult`` is the one field that does not
-survive the trip; everything the layers above need does).
+survive the trip; its executed ``timeline`` does, so a loaded report
+still renders its Perfetto trace via ``to_trace`` — everything the
+layers above need survives).
 """
 from __future__ import annotations
 
@@ -111,6 +113,10 @@ class CodesignReport:
     # stalled waiting on each comm task (sums to ``exposed_comm``) —
     # the per-edge accounting the overlap search optimizes against
     task_exposed_s: Dict[str, float] = field(default_factory=dict)
+    # the executed schedule (``SimResult.timeline`` verbatim): persisted —
+    # unlike the live ``sim`` — so a from_dict-loaded report still renders
+    # its Perfetto trace (``to_trace``)
+    timeline: List[Tuple[str, float, float]] = field(default_factory=list)
 
     @property
     def comm_fraction(self) -> float:
@@ -168,6 +174,7 @@ class CodesignReport:
             else budget,
             "wire_bytes_saved": self.wire_bytes_saved,
             "task_exposed_s": dict(self.task_exposed_s),
+            "timeline": [[n, s, e] for n, s, e in self.timeline],
         }
 
     @classmethod
@@ -185,4 +192,17 @@ class CodesignReport:
             error_budget=dict(budget) if isinstance(budget, dict)
             else budget,
             wire_bytes_saved=d["wire_bytes_saved"],
-            task_exposed_s=dict(d.get("task_exposed_s", {})))
+            task_exposed_s=dict(d.get("task_exposed_s", {})),
+            timeline=[(n, s, e) for n, s, e in d.get("timeline", [])])
+
+    # ------------------------------------------------------------------
+    # Observability
+    # ------------------------------------------------------------------
+
+    def to_trace(self, topo=None, **kw):
+        """This plan as a Perfetto-loadable ``repro.obs.trace.Trace``:
+        compute / comm / exposed-comm tracks from the persisted timeline,
+        plus per-link utilization counters when the live ``Topology`` is
+        passed.  Works identically on a ``from_dict``-loaded report."""
+        from repro.obs.trace import trace_from_report
+        return trace_from_report(self.to_dict(), topo=topo, **kw)

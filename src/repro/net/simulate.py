@@ -153,6 +153,39 @@ def link_utilization(topo: Topology, fs: FlowSet,
     return dict(out)
 
 
+def link_rate_series(topo: Topology,
+                     placed: Sequence[Tuple[FlowSet, float, float]],
+                     aggregate_at: Optional[Set] = None
+                     ) -> Dict[Tuple, List[Tuple[float, float]]]:
+    """Per-link byte-rate step functions for a scheduled set of collectives.
+
+    ``placed`` pairs each FlowSet with the wall-clock window it occupied
+    (``(fs, start_s, end_s)``, e.g. a ``SimResult.timeline`` comm span);
+    the schedule's per-link bytes (:func:`link_utilization`, so
+    ``aggregate_at`` applies) are spread uniformly over the window.
+    Returns ``link -> [(t, bytes_per_s), ...]`` breakpoints — a
+    piecewise-constant utilization profile, sorted by time and closed
+    with a final zero-rate sample — ready to plot or to emit as trace
+    counter tracks (``repro.obs.trace``)."""
+    deltas: Dict[Tuple, Dict[float, float]] = defaultdict(
+        lambda: defaultdict(float))
+    for fs, start, end in placed:
+        dur = max(end - start, 1e-12)
+        for link, nbytes in link_utilization(topo, fs, aggregate_at).items():
+            rate = nbytes / dur
+            deltas[link][start] += rate
+            deltas[link][start + dur] -= rate
+    series: Dict[Tuple, List[Tuple[float, float]]] = {}
+    for link, dd in deltas.items():
+        rate = 0.0
+        points: List[Tuple[float, float]] = []
+        for t in sorted(dd):
+            rate += dd[t]
+            points.append((t, max(rate, 0.0)))
+        series[link] = points
+    return series
+
+
 def shared_link_load(per_job: Dict[str, Dict[Tuple, float]],
                      min_jobs: int = 2) -> Dict[Tuple, Dict[str, float]]:
     """Link-share query for the horizontal planner: given per-job link-byte

@@ -1,0 +1,25 @@
+"""repro.obs — tracing, telemetry and measured-vs-modeled probes.
+
+The observability layer of the five-layer engine:
+
+  * ``obs.trace``  — span/counter/instant recorder + Chrome Trace Event
+    (Perfetto) export; every report type gains ``to_trace()`` and
+    ``python -m repro.obs.export`` converts persisted report JSON;
+  * ``obs.meters`` — deterministic counters threaded through FlowSim
+    memoization, ``search()`` and ``ClusterDynamics``;
+  * ``obs.probe``  — ``block_until_ready``-bracketed wall-clock spans
+    for the executable collectives next to their model predictions
+    (import it explicitly: it is kept out of this namespace so the
+    trace/export surface never pulls in the jax runtime).
+"""
+from repro.obs.meters import Meters
+from repro.obs.trace import (EXPOSED_CNAME, Trace, timeline_tracks,
+                             trace_from_cluster, trace_from_dynamics,
+                             trace_from_report, trace_from_search,
+                             validate_chrome)
+
+__all__ = [
+    "Meters", "Trace", "EXPOSED_CNAME", "timeline_tracks",
+    "trace_from_report", "trace_from_search", "trace_from_cluster",
+    "trace_from_dynamics", "validate_chrome",
+]

@@ -151,17 +151,21 @@ def worst_stretch(jct: Dict[str, float],
 
 def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8,
                  link_demands: Optional[LinkDemands] = None,
-                 horizon_iters: int = 20, dt: float = 1e-4
+                 horizon_iters: int = 20, dt: float = 1e-4, meters=None
                  ) -> Tuple[Tuple[float, ...], Dict[str, float],
                             Dict[str, float]]:
     """CASSINI-style phase search: grid over phase offsets of jobs[1:]
     (job 0 pinned at 0), minimizing the worst relative slowdown.
     Returns (best_phases, jct_unstaggered, jct_staggered).  The zero-phase
     schedule is always in the search set, so the staggered worst case is
-    never worse than the naive one."""
+    never worse than the naive one.  ``meters`` (``repro.obs.meters``)
+    counts the grid points simulated."""
+
     base_phases = tuple(0.0 for _ in jobs)
 
     def sim(phases):
+        if meters is not None:
+            meters.incr("flows.stagger.evals")
         return _simulate_links(jobs, phases, link_demands, horizon_iters, dt)
 
     base = sim(base_phases)
@@ -183,7 +187,7 @@ def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8,
 def restagger_jobs(jobs: Sequence[JobProfile], phases: Sequence[float],
                    free: Sequence[int], grid: int = 8,
                    link_demands: Optional[LinkDemands] = None,
-                   horizon_iters: int = 20, dt: float = 1e-4
+                   horizon_iters: int = 20, dt: float = 1e-4, meters=None
                    ) -> Tuple[Tuple[float, ...], Dict[str, float],
                               Dict[str, float]]:
     """Incremental CASSINI: search phase offsets only for the jobs at the
@@ -204,6 +208,8 @@ def restagger_jobs(jobs: Sequence[JobProfile], phases: Sequence[float],
     base_phases = tuple(phases)
 
     def sim(ph):
+        if meters is not None:
+            meters.incr("flows.restagger.evals")
         return _simulate_links(jobs, ph, link_demands, horizon_iters, dt)
 
     base = sim(base_phases)

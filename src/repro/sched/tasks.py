@@ -54,6 +54,11 @@ class SimResult:
     compute_time: float
     comm_time: float
     exposed_comm: float
+    # the iteration's executed schedule: ``("comp:<id>" | "comm:<id>",
+    # start_s, end_s)`` per run segment.  Compute entries tile the
+    # accelerator resource, comm entries the (single) network resource;
+    # within each resource the spans never overlap (preempted transfers
+    # are split into one span per segment).
     timeline: List[Tuple[str, float, float]] = field(default_factory=list)
     # per-task answers from the CCL layer, recorded when ``comm_cost``
     # returns (seconds, algorithm) pairs (the codesign driver does)
@@ -66,6 +71,15 @@ class SimResult:
     @property
     def comm_fraction(self) -> float:
         return self.exposed_comm / self.jct if self.jct else 0.0
+
+    def to_trace(self, label: str = "iteration"):
+        """This schedule as a Perfetto-loadable ``repro.obs.trace.Trace``
+        (compute / comm / exposed-comm tracks)."""
+        from repro.obs.trace import Trace, timeline_tracks
+        tr = Trace()
+        timeline_tracks(tr, pid=1, label=label, timeline=self.timeline,
+                        task_exposed_s=self.task_exposed_s)
+        return tr
 
 
 def _pick(policy: Policy, ready: List[CommTask], arrival: Dict[str, int]
@@ -147,6 +161,18 @@ def simulate_iteration(demand: CommDemand,
         fin, task = running
         elapsed = max(0.0, at - run_start)
         dur_left[task.task_id] = max(0.0, (fin - run_start) - elapsed)
+        # the span appended at start covered the full duration; cut it to
+        # what actually ran (the remainder gets its own span on resume) so
+        # the timeline never holds two concurrent spans on the one network
+        # resource
+        name = f"comm:{task.task_id}"
+        for j in range(len(timeline) - 1, -1, -1):
+            if timeline[j][0] == name:
+                if elapsed > 0.0:
+                    timeline[j] = (name, run_start, run_start + elapsed)
+                else:
+                    del timeline[j]
+                break
         t_net = at
         running = None
 
