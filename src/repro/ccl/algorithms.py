@@ -387,6 +387,23 @@ def atp_all_reduce(task: CommTask, ps: int = None) -> FlowSet:
     return fs
 
 
+def direct_p2p(task: CommTask) -> FlowSet:
+    """Point-to-point transfer: one flow from ``group[0]`` to ``group[1]``
+    (pipeline-parallel activation hand-off, serving KV-cache shard
+    migration from a prefill rank to a decode rank).  Degenerate as a
+    "collective", but routing it through the same FlowSet machinery means
+    p2p traffic shows up in link utilization maps and contends in FlowSim
+    like everything else."""
+    group = task.group
+    fs = FlowSet(task_id=task.task_id, algorithm="direct")
+    if len(group) < 2 or group[0] == group[1]:
+        return fs
+    fs.flows.append(Flow(group[0], group[1], task.size_bytes, task.task_id,
+                         0, task.job_id))
+    fs.num_steps = 1
+    return fs
+
+
 # ---------------------------------------------------------------------------
 # Compressed candidates (repro.compress): same schedule, fewer wire bytes
 # ---------------------------------------------------------------------------
@@ -448,6 +465,7 @@ ALGORITHMS: Dict[str, Dict[str, Callable[[CommTask], FlowSet]]] = {
     "broadcast": {"binomial": binomial_broadcast},
     "all_to_all": {"direct": direct_all_to_all, "ring": ring_all_to_all},
     "permute": {"ring": ring_permute},
+    "p2p": {"direct": direct_p2p},
 }
 
 

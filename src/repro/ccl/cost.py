@@ -138,6 +138,11 @@ def algo_cost(primitive: str, algorithm: str, size_bytes: int, p: int,
             return a + (p - 1) / p * n / b
         if algorithm == "ring":
             return (p - 1) * a + (p - 1) / p * n / b
+    if primitive == "p2p":
+        # single point-to-point transfer (pipeline hand-off, KV-cache shard
+        # migration): one latency step, the whole payload on one link
+        if algorithm == "direct":
+            return a + n / b
     raise KeyError(f"no cost model for {primitive}/{algorithm}")
 
 

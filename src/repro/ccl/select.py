@@ -152,6 +152,20 @@ class AlphaBeta:
         cp = self.params
         p = len(task.group)
         base = base_algorithm(algorithm)
+        if task.primitive == "p2p" and p == 2:
+            # a point-to-point transfer runs at its actual path bottleneck
+            # (a KV-cache shard hop may cross the NIC tier even though
+            # p=2 never trips the group-spans-hosts heuristic below)
+            u, v = task.group
+            if self.topo is not None and u != v:
+                bw = min(self.topo.link_bw(a, b)
+                         for a, b in self.topo.path_links(u, v))
+                cp = dataclasses.replace(cp, link_bw=bw)
+            elif cp.inter_bw and cp.gpus_per_host > 1 \
+                    and u // cp.gpus_per_host != v // cp.gpus_per_host:
+                cp = dataclasses.replace(cp, link_bw=cp.inter_bw)
+            return algo_cost(task.primitive, algorithm, task.size_bytes, p,
+                             cp)
         if base == "atp" and not cp.inter_bw:
             # switched but non-hierarchical fabric (e.g. one NIC per host):
             # the aggregation tier runs at the bottleneck link bandwidth

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import restore_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (checkpoint_state_bytes,  # noqa: F401
+                                 restore_checkpoint, save_checkpoint)

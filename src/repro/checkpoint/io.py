@@ -14,6 +14,19 @@ import msgpack
 import numpy as np
 
 
+def checkpoint_state_bytes(cfg, param_bytes: int = 4,
+                           moment_bytes: int = 4, moments: int = 2) -> int:
+    """Bytes a tenant re-ingests on checkpoint-restore: f32 master params
+    plus the optimizer moments (AdamW: two f32 tensors per param), 12
+    bytes/param by default.  ZeRO-1 sharding changes who holds which
+    shard, not the total that must cross the job's ingress links, so the
+    estimate is sharding-independent.  Pure arithmetic over
+    ``ModelConfig.param_counts()`` — usable by the cluster-dynamics
+    planner without touching the filesystem."""
+    total = cfg.param_counts()["total"]
+    return int(total * (param_bytes + moments * moment_bytes))
+
+
 def _flatten(tree: Any):
     leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
     flat = {}

@@ -59,6 +59,19 @@ together behind one declarative surface:
     ``ClusterReport`` (naive vs. staggered per-job JCT, contended links,
     chosen phases).
 
+``serving``
+    The inference half of the story: ``ServingSpec`` (model +
+    prefill/decode disaggregation + SLO + an open-loop
+    ``sched.arrivals`` process) turns ``CodesignProblem`` into a
+    serving problem.  ``plan_serving`` prices the prefill batch graph,
+    the per-rank KV-cache ``p2p`` hand-off, and the one-token decode
+    step through the same CCL/network layers, then replays the arrival
+    process through a deterministic queueing simulation with co-tenant
+    training pulses contending on shared links.  ``ServingReport``
+    speaks TTFT/TPOT percentiles + goodput, registered in the shared
+    objective metric registry, so ``search()`` over a ``stagger`` or
+    ``placement`` knob returns SLO-feasible serving plans.
+
 ``dynamics``
     The cluster as a moving target: ``ClusterDynamics`` consumes a trace
     of ``Event``s (job arrival/departure, link failure/degradation, host
@@ -91,6 +104,10 @@ from repro.codesign.report import CodesignReport, TaskChoice  # noqa: F401
 from repro.codesign.api import (Candidate, CodesignProblem,  # noqa: F401
                                 Objective, PlanSpace, SearchResult,
                                 plan, search)
+from repro.codesign.serving import (CotenantPulse, ServingReport,  # noqa: F401
+                                    ServingSLO, ServingSpec,
+                                    kv_bytes_per_token, plan_serving,
+                                    serving_problem)
 from repro.codesign.placement_search import (  # noqa: F401
     balanced_placement, heuristic_placements, swap_neighbors)
 from repro.codesign.driver import plan_iteration  # noqa: F401

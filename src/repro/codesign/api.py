@@ -53,13 +53,16 @@ from repro.sched.atp import aggregation_switches
 from repro.sched.tasks import Policy, simulate_iteration
 
 from repro.codesign.placement import Placement, place_mesh
-from repro.codesign.report import (CodesignReport, TaskChoice,
-                                   _placement_from_dict, _placement_to_dict)
+from repro.codesign.report import (OBJECTIVE_METRICS, CodesignReport,
+                                   TaskChoice, _placement_from_dict,
+                                   _placement_to_dict, metric_value)
 
 # the scalar knobs plan() needs pinned and search() may enumerate
-# (per-primitive algorithm knobs are selection constraints instead)
+# (per-primitive algorithm knobs are selection constraints instead).
+# ``stagger`` only matters for serving problems (the co-tenant phase
+# offset in seconds); training plans ignore it.
 SCALAR_KNOBS = ("placement", "policy", "error_budget", "switch_capacity",
-                "bucket_bytes", "decompose")
+                "bucket_bytes", "decompose", "stagger")
 
 
 @dataclass(frozen=True)
@@ -89,6 +92,11 @@ class PlanSpace:
     switch_capacity: Knob = Fixed(None)
     bucket_bytes: Knob = Fixed(None)
     decompose: Knob = Fixed(False)
+    # serving problems only: phase offset (seconds) of this tenant's
+    # admission clock against the co-tenant training pulses sharing its
+    # fabric — the CASSINI stagger lever, per-tenant.  ``Search()``
+    # generates a grid over the co-tenant period.
+    stagger: Knob = Fixed(0.0)
 
     def scalar_knobs(self) -> Dict[str, Knob]:
         return {name: getattr(self, name) for name in SCALAR_KNOBS}
@@ -117,35 +125,66 @@ class PlanSpace:
 
 @dataclass(frozen=True)
 class Objective:
-    """What 'best' means.  ``minimize``/``tie_break`` name report
-    metrics (``wire_bytes_saved`` is bigger-is-better and is negated
-    internally, so naming it always rewards saving more bytes);
-    ``max_worst_link_bytes`` is a feasibility constraint on the hottest
-    link's per-iteration byte load."""
+    """What 'best' means.  ``minimize``/``tie_break`` name metrics from
+    the shared registry (``codesign.report.OBJECTIVE_METRICS``) —
+    training metrics (``jct``, ``exposed_comm``, ...) and serving
+    metrics (``ttft_p99``, ``goodput``, ... registered by
+    ``codesign.serving``) share one namespace, so an unknown name fails
+    here with the full valid set instead of deep inside ``key()``.
+    Bigger-is-better metrics (``wire_bytes_saved``, ``goodput``) are
+    negated internally, so naming one always rewards more of it.
+
+    ``constraints`` maps metric names to feasibility bounds: an *upper*
+    bound for minimized metrics, a *lower* bound for maximized ones
+    (``{"ttft_p99": 0.5, "goodput": 3.0}`` = p99 TTFT within 500 ms AND
+    at least 3 req/s of goodput).  ``max_worst_link_bytes`` is the
+    legacy spelling of ``constraints={"worst_link_bytes": ...}`` and is
+    folded in."""
 
     minimize: str = "jct"
     tie_break: Tuple[str, ...] = ("exposed_comm", "worst_link_bytes")
     max_worst_link_bytes: Optional[float] = None
+    constraints: Mapping[str, float] = field(default_factory=dict)
 
+    # legacy class attrs, kept importable (the registry is the source of
+    # truth; serving extends it at import)
     METRICS = ("jct", "exposed_comm", "comm_time", "compute_time",
                "worst_link_bytes", "wire_bytes_saved")
     _MAXIMIZED = ("wire_bytes_saved",)
 
     def __post_init__(self):
-        for m in (self.minimize, *self.tie_break):
-            if m not in self.METRICS:
-                raise ValueError(f"unknown objective metric {m!r} "
-                                 f"(one of {self.METRICS})")
+        merged = dict(self.constraints)
+        if self.max_worst_link_bytes is not None:
+            merged.setdefault("worst_link_bytes", self.max_worst_link_bytes)
+        object.__setattr__(self, "constraints", merged)
+        for m in (self.minimize, *self.tie_break, *merged):
+            if m not in OBJECTIVE_METRICS:
+                raise ValueError(
+                    f"unknown objective metric {m!r}; valid metrics: "
+                    f"{sorted(OBJECTIVE_METRICS)}")
 
-    def key(self, report: CodesignReport) -> Tuple[float, ...]:
+    def key(self, report) -> Tuple[float, ...]:
         """Lexicographic minimization key."""
-        return tuple(-getattr(report, m) if m in self._MAXIMIZED
-                     else getattr(report, m)
+        return tuple(-metric_value(report, m) if OBJECTIVE_METRICS[m]
+                     else metric_value(report, m)
                      for m in (self.minimize, *self.tie_break))
 
-    def feasible(self, report: CodesignReport) -> bool:
-        return (self.max_worst_link_bytes is None
-                or report.worst_link_bytes <= self.max_worst_link_bytes)
+    def infeasible_reason(self, report) -> Optional[str]:
+        """Why ``report`` violates the constraints (None = feasible).
+        Checked in sorted-metric order so the reported reason is
+        deterministic when several constraints fail."""
+        for m in sorted(self.constraints):
+            bound = self.constraints[m]
+            v = metric_value(report, m)
+            if OBJECTIVE_METRICS[m]:
+                if v < bound:
+                    return f"{m} {v:.6g} < required {bound:.6g}"
+            elif v > bound:
+                return f"{m} {v:.6g} > limit {bound:.6g}"
+        return None
+
+    def feasible(self, report) -> bool:
+        return self.infeasible_reason(report) is None
 
 
 @dataclass(frozen=True)
@@ -162,6 +201,11 @@ class CodesignProblem:
     cost_model: Union[str, CostModel] = "flowsim"
     dp_params: Optional[DemandParams] = None
     hotspot_k: int = 8
+    # serving problems: a ``codesign.serving.ServingSpec`` makes this an
+    # inference workload — ``plan()`` dispatches to ``plan_serving`` and
+    # the objective speaks SLO metrics (ttft_p99, goodput, ...) instead
+    # of JCT.  ``serving_problem(...)`` is the ergonomic constructor.
+    serving: Optional[object] = None
 
     @classmethod
     def from_kwargs(cls, cfg: ModelConfig, shape: ShapeConfig,
@@ -262,7 +306,11 @@ def plan(problem: CodesignProblem,
 
     Every scalar knob of ``problem.space`` must be ``Fixed`` — free
     knobs are ``search()``'s job.  ``_resolved`` lets the search loop
-    share one memoized cost model across candidates."""
+    share one memoized cost model across candidates.
+
+    Serving problems (``problem.serving`` set) dispatch to
+    ``codesign.serving.plan_serving``: same knob discipline, but the
+    report speaks TTFT/TPOT/goodput under the arrival process."""
     space = problem.space
     free = space.free_knobs()
     if free:
@@ -270,6 +318,9 @@ def plan(problem: CodesignProblem,
             f"plan() needs every scalar knob Fixed, but "
             f"{sorted(free)} are free ({free}) — use search(problem) "
             f"to walk them")
+    if problem.serving is not None:
+        from repro.codesign.serving import plan_serving
+        return plan_serving(problem, _resolved=_resolved)
     topo = problem.topo
     placement = space.placement.value
     policy: Policy = space.policy.value
@@ -527,6 +578,28 @@ def _bucket_candidates(problem: CodesignProblem,
     return out
 
 
+def _stagger_candidates(problem: CodesignProblem,
+                        seeds: Tuple = ()) -> List[float]:
+    """Candidate phase offsets for ``stagger=Search()`` on a serving
+    problem: 0 first (the naive co-tenant baseline attribution reverts
+    to), then an even grid over the first co-tenant training pulse's
+    period — the CASSINI insight applied to the serving admission clock.
+    Deterministic; ``seeds`` appends explicit extra offsets."""
+    spec = problem.serving
+    cotenants = getattr(spec, "cotenants", ()) if spec is not None else ()
+    out: List[float] = [0.0]
+    if cotenants:
+        period = cotenants[0].period_s
+        grid = 8
+        for i in range(1, grid):
+            out.append(i * period / grid)
+    for s in seeds or ():
+        v = float(s)
+        if v not in out:
+            out.append(v)
+    return out
+
+
 def _canon(value) -> Tuple:
     """Hashable identity of an assignment value (dedup key)."""
     if isinstance(value, Placement):
@@ -573,11 +646,13 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
             axes[name] = _bucket_candidates(problem, knob.seeds)
         elif name == "decompose":  # Search: bulk baseline, then rewritten
             axes[name] = [False, True]
+        elif name == "stagger":  # Search: grid over the co-tenant period
+            axes[name] = _stagger_candidates(problem, knob.seeds)
         else:
             raise ValueError(
                 f"knob {name!r} is Search() but only placement, "
-                f"bucket_bytes and decompose have candidate generators "
-                f"— use Choice(...) for it")
+                f"bucket_bytes, decompose and stagger have candidate "
+                f"generators — use Choice(...) for it")
     pinned = {name: knob.value
               for name, knob in space.scalar_knobs().items()
               if name not in axes}
@@ -610,10 +685,8 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
         values.update(assignment)
         prob = problem.pinned(**values)
         report = plan(prob, _resolved=model_for(values["switch_capacity"]))
-        feasible = objective.feasible(report)
-        reason = None if feasible else (
-            f"worst_link_bytes {report.worst_link_bytes:.6g} > "
-            f"{objective.max_worst_link_bytes:.6g}")
+        reason = objective.infeasible_reason(report)
+        feasible = reason is None
         cand = Candidate(assignment=dict(assignment), jct=report.jct,
                          exposed_comm=report.exposed_comm,
                          worst_link_bytes=report.worst_link_bytes,
@@ -682,9 +755,7 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
 
     if best is None or not best.feasible:
         hint = "" if best is None else \
-            f" (best infeasible plan: worst_link_bytes=" \
-            f"{best.worst_link_bytes:.3g} > " \
-            f"{objective.max_worst_link_bytes:.3g})"
+            f" (best infeasible plan: {best.reason})"
         raise ValueError(f"search found no feasible plan within "
                          f"budget={budget}{hint}")
 
@@ -703,7 +774,9 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
             continue
         reverted = evaluate({**best.assignment, name: base_value},
                             charge=False, phase="baseline")
-        attribution[name] = reverted.jct - best.jct
+        # objective-primary delta (== JCT delta for the default training
+        # objective; TTFT-p99 delta for a latency-SLO serving objective)
+        attribution[name] = reverted.key[0] - best.key[0]
         if reverted is not best:
             reverted.report = None
 

@@ -33,8 +33,8 @@ from repro.core.knobs import Fixed
 from repro.core.types import MeshConfig, ModelConfig, ShapeConfig
 from repro.net.simulate import shared_link_load
 from repro.net.topology import Topology
-from repro.sched.flows import (JobProfile, restagger_jobs, stagger_jobs,
-                               worst_stretch)
+from repro.sched.flows import (BurstProfile, JobProfile, restagger_jobs,
+                               stagger_jobs, stagger_mixed, worst_stretch)
 from repro.sched.tasks import Policy
 
 from repro.codesign.api import CodesignProblem, plan
@@ -68,8 +68,26 @@ class JobSpec:
     # shrink what the horizontal layer sees on contended links
     error_budget: Union[float, Dict[str, float]] = 0.0
     problem: Optional[CodesignProblem] = None
+    # a serving tenant (codesign.serving.ServingSpec): prefill/decode
+    # disaggregation + open-loop arrivals instead of a training iteration.
+    # Mutually exclusive with the flat fields and with problem=.
+    serving: Optional[object] = None
 
     def __post_init__(self):
+        if self.serving is not None:
+            if (self.problem is not None or self.cfg is not None
+                    or self.shape is not None or self.mesh is not None
+                    or self.policy != "priority"
+                    or self.dp_params is not None or self.force is not None
+                    or self.error_budget != 0.0):
+                raise ValueError(
+                    f"job {self.name!r}: serving= carries the per-tenant "
+                    f"config; don't also pass cfg/shape/mesh/policy/"
+                    f"dp_params/force/error_budget/problem")
+            object.__setattr__(self, "cfg", self.serving.cfg)
+            object.__setattr__(self, "mesh", self.serving.mesh())
+            object.__setattr__(self, "dp_params", self.serving.dp_params)
+            return
         if self.problem is None:
             if self.cfg is None or self.shape is None or self.mesh is None:
                 raise ValueError(f"job {self.name!r} needs cfg/shape/mesh "
@@ -108,6 +126,15 @@ class JobSpec:
         """This job as a fully pinned problem on the shared cluster:
         the carved placement and the cluster-level cost model / switch
         budget override whatever the carried problem held."""
+        if self.serving is not None:
+            from repro.codesign.serving import serving_problem
+            prob = serving_problem(self.serving, topo,
+                                   cost_model=cost_model,
+                                   hotspot_k=hotspot_k)
+            space = dataclasses.replace(
+                prob.space, placement=Fixed(placement),
+                switch_capacity=Fixed(switch_capacity))
+            return dataclasses.replace(prob, space=space)
         if self.problem is not None:
             space = dataclasses.replace(
                 self.problem.space, placement=Fixed(placement),
@@ -149,9 +176,13 @@ class JobPlan:
     @classmethod
     def from_dict(cls, d: Dict, spec: JobSpec) -> "JobPlan":
         p = d["profile"]
+        if "ttft" in d["report"]:  # a serving tenant's report
+            from repro.codesign.serving import ServingReport
+            report = ServingReport.from_dict(d["report"])
+        else:
+            report = CodesignReport.from_dict(d["report"])
         return cls(
-            spec=spec, devices=tuple(d["devices"]),
-            report=CodesignReport.from_dict(d["report"]),
+            spec=spec, devices=tuple(d["devices"]), report=report,
             profile=JobProfile(d["name"], p["compute_s"], p["comm_s"],
                                p["demand_frac"]),
             link_bytes={_parse_link_key(k): b
@@ -169,6 +200,9 @@ class ClusterReport:
     staggered_jct: Dict[str, float]
     cost_model: str = "flowsim"
     link_demands: Dict[str, Dict[Tuple, float]] = field(default_factory=dict)
+    # per serving tenant: naive (zero training phases) vs. staggered SLO
+    # numbers under co-tenancy — {name: {"naive_ttft_p99": ..., ...}}
+    serving: Dict[str, Dict[str, float]] = field(default_factory=dict)
 
     @property
     def solo_jct(self) -> Dict[str, float]:
@@ -176,7 +210,12 @@ class ClusterReport:
         return {jp.spec.name: jp.profile.period for jp in self.jobs}
 
     def _stretch(self, jct: Dict[str, float]) -> float:
-        return worst_stretch(jct, [jp.profile for jp in self.jobs])
+        # training tenants only: serving quality lives in SLO metrics
+        # (self.serving), not in iteration stretch
+        profs = [jp.profile for jp in self.jobs if jp.spec.serving is None]
+        if not profs:
+            return 1.0
+        return worst_stretch(jct, profs)
 
     @property
     def naive_worst_stretch(self) -> float:
@@ -210,6 +249,7 @@ class ClusterReport:
             "link_demands": {name: {_link_key(l): f
                                     for l, f in dem.items()}
                              for name, dem in self.link_demands.items()},
+            "serving": {name: dict(m) for name, m in self.serving.items()},
         }
 
     @classmethod
@@ -230,7 +270,9 @@ class ClusterReport:
             cost_model=d["cost_model"],
             link_demands={name: {_parse_link_key(k): f
                                  for k, f in dem.items()}
-                          for name, dem in d["link_demands"].items()})
+                          for name, dem in d["link_demands"].items()},
+            serving={name: dict(m)
+                     for name, m in d.get("serving", {}).items()})
 
     def to_trace(self, topo=None, **kw):
         """The cluster plan as a Perfetto trace: one process group per
@@ -329,9 +371,17 @@ def plan_cluster(jobs: Sequence[JobSpec], topo: Topology,
         placement = place_mesh(spec.mesh, topo, "custom", custom=devs)
         report = plan(spec.to_problem(topo, placement, cost_model,
                                       switch_capacity, hotspot_k=n_links))
+        if spec.serving is not None:
+            # per-batch pulse: the prefill batch graph + KV hand-off +
+            # one decode step's comm, pressed whenever a batch is in
+            # flight (the burst schedule comes from the arrivals)
+            profile = JobProfile(spec.name,
+                                 max(report.compute_time, 1e-9),
+                                 max(report.comm_time, 0.0))
+        else:
+            profile = _job_profile(spec.name, report)
         plans.append(JobPlan(
-            spec=spec, devices=devs, report=report,
-            profile=_job_profile(spec.name, report),
+            spec=spec, devices=devs, report=report, profile=profile,
             link_bytes=dict(report.link_hotspots)))
     model_name = plans[0].report.cost_model  # as the driver resolved it
     return _stagger_plans(plans, topo, grid=grid,
@@ -390,7 +440,18 @@ def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
             phases={n: 0.0 for n in names},
             naive_jct=dict(solo), staggered_jct=dict(solo),
             cost_model=cost_model,
-            link_demands={n: {} for n in names})
+            link_demands={n: {} for n in names},
+            serving={jp.spec.name: _solo_serving_metrics(jp.report)
+                     for jp in plans if jp.spec.serving is not None})
+
+    if any(jp.spec.serving is not None for jp in plans):
+        # training/serving co-tenancy: bursts are pinned by arrivals, so
+        # the phase grid only sweeps the training jobs (stagger_mixed);
+        # incremental re-staggering redoes the full mixed grid — the
+        # sweep is grid**n_training, already the small side
+        return _stagger_mixed_plans(plans, topo, contended, link_demands,
+                                    grid, horizon_iters, dt, cost_model,
+                                    meters)
 
     if dt is None:
         dt = min(p.period for p in profiles) / 400.0
@@ -418,6 +479,116 @@ def _stagger_plans(plans: List[JobPlan], topo: Topology, grid: int,
         cost_model=cost_model,
         link_demands={jp.spec.name: d
                       for jp, d in zip(plans, link_demands)})
+
+
+def _solo_serving_metrics(report) -> Dict[str, float]:
+    """Serving SLO numbers when co-tenancy changes nothing (no shared
+    links): naive == staggered == the tenant's solo report."""
+    out = {}
+    for k in ("ttft_p99", "tpot_p99", "goodput", "slo_attainment"):
+        v = float(getattr(report, k))
+        out[f"naive_{k}"] = v
+        out[f"staggered_{k}"] = v
+    out["naive_burst_stretch"] = 1.0
+    out["staggered_burst_stretch"] = 1.0
+    return out
+
+
+def _serving_bursts(jp: JobPlan) -> BurstProfile:
+    """The serving tenant as the flow scheduler sees it: one comm burst
+    per prefill batch (arrival order, batches of ``prefill_batch``), each
+    scheduled when its last member arrives and carrying the per-batch
+    comm time; FIFO chaining in the simulator models the busy server."""
+    spec = jp.spec.serving
+    arrivals = spec.arrivals.sample(spec.horizon_s)
+    comm_s = jp.profile.comm_s
+    starts = [arrivals[min(i + spec.prefill_batch, len(arrivals)) - 1].t
+              for i in range(0, len(arrivals), spec.prefill_batch)]
+    return BurstProfile(jp.spec.name,
+                        tuple((s, comm_s) for s in starts))
+
+
+def _serving_under_pulses(jp: JobPlan, topo: Topology, cost_model: str,
+                          train_plans: Sequence[JobPlan],
+                          train_demands: Sequence[Dict[Tuple, float]],
+                          phases: Dict[str, float]):
+    """Re-price one serving tenant with every training co-tenant folded
+    in as a :class:`serving.CotenantPulse` at the given phases.  The
+    pulse's comm window starts where the flow scheduler puts it:
+    ``compute_s + phase`` into the iteration."""
+    from repro.codesign.serving import CotenantPulse, serving_problem
+    pulses = []
+    for tjp, dem in zip(train_plans, train_demands):
+        prof = tjp.profile
+        if prof.comm_s <= 0 or not dem:
+            continue
+        ph = (prof.compute_s
+              + phases.get(tjp.spec.name, 0.0)) % prof.period
+        pulses.append(CotenantPulse(tjp.spec.name, prof.period,
+                                    prof.comm_s, ph, dict(dem)))
+    spec2 = dataclasses.replace(jp.spec.serving, cotenants=tuple(pulses))
+    placement = place_mesh(jp.spec.mesh, topo, "custom", custom=jp.devices)
+    prob = serving_problem(spec2, topo, cost_model=cost_model)
+    space = dataclasses.replace(prob.space, placement=Fixed(placement))
+    return plan(dataclasses.replace(prob, space=space))
+
+
+def _stagger_mixed_plans(plans: List[JobPlan], topo: Topology,
+                         contended: Dict[Tuple, Dict[str, float]],
+                         link_demands: List[Dict[Tuple, float]],
+                         grid: int, horizon_iters: int,
+                         dt: Optional[float], cost_model: str,
+                         meters=None) -> ClusterReport:
+    """The co-tenancy back half: CASSINI over the training phases with
+    the serving bursts pinned, then serving SLO numbers re-priced under
+    the naive (zero-phase) and chosen training pulse trains."""
+    names = [jp.spec.name for jp in plans]
+    train = [(i, jp) for i, jp in enumerate(plans)
+             if jp.spec.serving is None]
+    serve = [(i, jp) for i, jp in enumerate(plans)
+             if jp.spec.serving is not None]
+    tprofiles = [jp.profile for _, jp in train]
+    tdemands = [link_demands[i] for i, _ in train]
+    bursts = [_serving_bursts(jp) for _, jp in serve]
+    bdemands = [link_demands[i] for i, _ in serve]
+    if dt is None:
+        dt = min(jp.profile.period for jp in plans) / 400.0
+    best_phases, (jct0, st0), (jct1, st1) = stagger_mixed(
+        tprofiles, bursts, grid=grid, link_demands=tdemands,
+        burst_demands=bdemands, horizon_iters=horizon_iters, dt=dt,
+        meters=meters)
+    phase_map = {jp.spec.name: ph
+                 for (_, jp), ph in zip(train, best_phases)}
+    naive_jct = dict(jct0)
+    staggered_jct = dict(jct1)
+    serving_metrics: Dict[str, Dict[str, float]] = {}
+    train_plans = [jp for _, jp in train]
+    for (_, jp), burst in zip(serve, bursts):
+        n = jp.spec.name
+        # serving "JCT" entries are per-batch pulse periods (solo); SLO
+        # truth lives in the serving dict below
+        naive_jct[n] = jp.profile.period
+        staggered_jct[n] = jp.profile.period
+        zero = {tjp.spec.name: 0.0 for tjp in train_plans}
+        rep0 = _serving_under_pulses(jp, topo, cost_model, train_plans,
+                                     tdemands, zero)
+        rep1 = _serving_under_pulses(jp, topo, cost_model, train_plans,
+                                     tdemands, phase_map)
+        serving_metrics[n] = {
+            "naive_burst_stretch": st0.get(n, 1.0),
+            "staggered_burst_stretch": st1.get(n, 1.0),
+        }
+        for k in ("ttft_p99", "tpot_p99", "goodput", "slo_attainment"):
+            serving_metrics[n][f"naive_{k}"] = float(getattr(rep0, k))
+            serving_metrics[n][f"staggered_{k}"] = float(getattr(rep1, k))
+    phases = {n: phase_map.get(n, 0.0) for n in names}
+    return ClusterReport(
+        jobs=plans, contended=contended, phases=phases,
+        naive_jct=naive_jct, staggered_jct=staggered_jct,
+        cost_model=cost_model,
+        link_demands={jp.spec.name: d
+                      for jp, d in zip(plans, link_demands)},
+        serving=serving_metrics)
 
 
 def restagger_cluster(plans: List[JobPlan], topo: Topology,

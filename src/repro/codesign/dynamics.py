@@ -130,6 +130,9 @@ class EventRecord:
     full_replan_s: Optional[float] = None  # compare_full: full re-search
     regret: Optional[float] = None         # inc/full worst stretch - 1
     evicted: List[str] = field(default_factory=list)
+    # checkpoint-restore bill for tenants this event moved or evicted
+    # (modeled data-plane seconds, not controller wall-clock)
+    restore_s: float = 0.0
 
     def to_dict(self) -> Dict:
         d = {"kind": self.kind, "target": self.target, "time": self.time,
@@ -137,7 +140,8 @@ class EventRecord:
              "dirty_links": [_link_key(l) for l in self.dirty_links],
              "replan_s": self.replan_s, "worst_stretch": self.worst_stretch,
              "jct": dict(self.jct), "full_replan_s": self.full_replan_s,
-             "regret": self.regret, "evicted": list(self.evicted)}
+             "regret": self.regret, "evicted": list(self.evicted),
+             "restore_s": self.restore_s}
         return d
 
     @classmethod
@@ -150,7 +154,8 @@ class EventRecord:
                    worst_stretch=d["worst_stretch"], jct=dict(d["jct"]),
                    full_replan_s=d.get("full_replan_s"),
                    regret=d.get("regret"),
-                   evicted=list(d.get("evicted", [])))
+                   evicted=list(d.get("evicted", [])),
+                   restore_s=d.get("restore_s", 0.0))
 
 
 @dataclass
@@ -187,6 +192,12 @@ class DynamicsReport:
             return 0.0
         return sum(r.replan_s for r in self.records) / len(self.records)
 
+    @property
+    def total_restore_s(self) -> float:
+        """Checkpoint-restore seconds billed across the whole trace —
+        the data-plane price of every eviction/re-placement."""
+        return sum(r.restore_s for r in self.records)
+
     def to_dict(self) -> Dict:
         return {"records": [r.to_dict() for r in self.records],
                 "final": self.final.to_dict(),
@@ -205,6 +216,28 @@ class DynamicsReport:
         timelines (``repro.obs.trace.trace_from_dynamics``)."""
         from repro.obs.trace import trace_from_dynamics
         return trace_from_dynamics(self.to_dict(), topo=topo, **kw)
+
+
+def _restore_cost_s(spec: JobSpec, devices: Sequence[int],
+                    view: Topology) -> float:
+    """Checkpoint-restore bill for moving (or evicting) a tenant: the
+    job's full training state (``checkpoint.io.checkpoint_state_bytes``:
+    f32 master params + AdamW moments) streamed in over the job's
+    ingress bandwidth — each device pulls its shard through its own NIC,
+    so ingress is the sum over the job's devices of their slowest
+    incident inbound link on the current view."""
+    if not devices:
+        return 0.0
+    from repro.checkpoint.io import checkpoint_state_bytes
+    state = checkpoint_state_bytes(spec.cfg)
+    ingress = 0.0
+    for d in devices:
+        if d not in view.graph:
+            continue
+        bws = [view.link_bw(u, d) for u in view.graph.predecessors(d)]
+        if bws:
+            ingress += min(bws)
+    return state / ingress if ingress > 0 else 0.0
 
 
 def _respec(spec: JobSpec, devices: Optional[Tuple[int, ...]]) -> JobSpec:
@@ -389,6 +422,8 @@ class ClusterDynamics:
         re-plan (incrementally if possible), record the cost."""
         link_maps = {jp.spec.name: set(jp.link_bytes)
                      for jp in self.report.jobs}
+        old_devs = {jp.spec.name: tuple(jp.devices)
+                    for jp in self.report.jobs}
         dirty_links: Set[Tuple] = set()
         vertical: Set[str] = set()      # jobs needing a vertical re-plan
         phase_dirty: Set[str] = set()   # jobs whose phase is re-searched
@@ -471,12 +506,25 @@ class ClusterDynamics:
             if report is None:
                 mode = "full"
                 report, evicted = self._plan_full(view)
+                evicted_specs = {n: self.specs[n] for n in evicted}
                 for n in evicted:
                     del self.specs[n]
                     self.straggle.pop(n, None)
         else:
             report = self._empty_report()
         replan_s = self.clock() - t0
+
+        # checkpoint-restore bill: every surviving tenant whose device
+        # set moved re-ingests its training state at the new seats;
+        # evicted tenants drain theirs through the seats they had left
+        restore_s = 0.0
+        for jp in report.jobs:
+            prev = old_devs.get(jp.spec.name)
+            if prev is not None and prev != tuple(jp.devices):
+                restore_s += _restore_cost_s(jp.spec, jp.devices, view)
+        for n in evicted:
+            restore_s += _restore_cost_s(evicted_specs[n],
+                                         old_devs.get(n, ()), view)
 
         full_s = regret = None
         if self.compare_full and mode == "incremental" and self.specs:
@@ -495,6 +543,8 @@ class ClusterDynamics:
                             float(len(dirty_links)))
         if evicted:
             self.meters.incr("dynamics.evictions", float(len(evicted)))
+        if restore_s > 0:
+            self.meters.observe("dynamics.restore_s", restore_s)
 
         self.report = report
         rec = EventRecord(
@@ -505,7 +555,8 @@ class ClusterDynamics:
             worst_stretch=(report.staggered_worst_stretch
                            if report.jobs else 1.0),
             jct=dict(report.staggered_jct),
-            full_replan_s=full_s, regret=regret, evicted=evicted)
+            full_replan_s=full_s, regret=regret, evicted=evicted,
+            restore_s=restore_s)
         self.records.append(rec)
         return rec
 

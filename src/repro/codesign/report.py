@@ -21,6 +21,51 @@ from repro.sched.tasks import SimResult
 from repro.codesign.placement import Placement
 
 
+# ---------------------------------------------------------------------------
+# Shared metric registry (training + serving objectives)
+# ---------------------------------------------------------------------------
+
+# metric name -> maximize?  ``Objective`` (codesign.api) validates its
+# ``minimize`` / ``tie_break`` / ``constraints`` names against this one
+# registry, so training metrics (JCT, exposed comm, ...) and serving
+# metrics (TTFT/TPOT percentiles, goodput — registered by
+# ``codesign.serving`` at import) share the same namespace and the same
+# unknown-metric error.
+OBJECTIVE_METRICS: Dict[str, bool] = {
+    "jct": False,
+    "exposed_comm": False,
+    "comm_time": False,
+    "compute_time": False,
+    "worst_link_bytes": False,
+    "wire_bytes_saved": True,
+}
+
+
+def register_metric(name: str, maximize: bool = False) -> None:
+    """Register an objective metric (idempotent; re-registering with a
+    different direction is an error — one name, one meaning)."""
+    prev = OBJECTIVE_METRICS.get(name)
+    if prev is not None and prev != maximize:
+        raise ValueError(
+            f"metric {name!r} already registered with maximize={prev}")
+    OBJECTIVE_METRICS[name] = maximize
+
+
+def metric_value(report, name: str) -> float:
+    """Read metric ``name`` off a report object, with the registry's
+    unknown-metric error instead of a bare AttributeError."""
+    if name not in OBJECTIVE_METRICS:
+        raise ValueError(
+            f"unknown objective metric {name!r}; valid metrics: "
+            f"{sorted(OBJECTIVE_METRICS)}")
+    try:
+        return float(getattr(report, name))
+    except AttributeError:
+        raise ValueError(
+            f"metric {name!r} is not defined on {type(report).__name__} "
+            f"reports (it is registered for a different problem kind)")
+
+
 @dataclass
 class TaskChoice:
     """One comm task's resolved placement + algorithm selection."""

@@ -40,6 +40,10 @@ class CommTask:
     # "all" / None).  The codesign placement layer uses it to resolve the
     # logical group onto physical devices without guessing from group size.
     axis: Optional[str] = None
+    # serving phase tag ("prefill" / "kv" / "decode"; None for training
+    # tasks): lets SLO accounting and traces attribute comm to the
+    # request-lifecycle stage it serves.
+    phase: Optional[str] = None
 
 
 @dataclass(frozen=True)

@@ -16,10 +16,10 @@ from repro.obs.meters import Meters
 from repro.obs.trace import (EXPOSED_CNAME, Trace, timeline_tracks,
                              trace_from_cluster, trace_from_dynamics,
                              trace_from_report, trace_from_search,
-                             validate_chrome)
+                             trace_from_serving, validate_chrome)
 
 __all__ = [
     "Meters", "Trace", "EXPOSED_CNAME", "timeline_tracks",
     "trace_from_report", "trace_from_search", "trace_from_cluster",
-    "trace_from_dynamics", "validate_chrome",
+    "trace_from_dynamics", "trace_from_serving", "validate_chrome",
 ]

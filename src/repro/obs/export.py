@@ -19,9 +19,10 @@ import json
 from typing import Dict, Optional
 
 from repro.obs.trace import (Trace, trace_from_cluster, trace_from_dynamics,
-                             trace_from_report, trace_from_search)
+                             trace_from_report, trace_from_search,
+                             trace_from_serving)
 
-KINDS = ("report", "search", "cluster", "dynamics")
+KINDS = ("report", "search", "cluster", "dynamics", "serving")
 
 
 def detect_kind(d: Dict) -> str:
@@ -30,6 +31,8 @@ def detect_kind(d: Dict) -> str:
         return "dynamics"
     if "best" in d and "frontier" in d:
         return "search"
+    if "ttft" in d and "requests" in d:
+        return "serving"
     if "jobs" in d and "staggered_jct" in d:
         return "cluster"
     if "choices" in d and "jct" in d:
@@ -37,7 +40,7 @@ def detect_kind(d: Dict) -> str:
     raise ValueError(
         f"unrecognized report document (top-level keys {sorted(d)[:8]}); "
         f"expected a CodesignReport / SearchResult / ClusterReport / "
-        f"DynamicsReport to_dict() JSON")
+        f"DynamicsReport / ServingReport to_dict() JSON")
 
 
 def build_trace(d: Dict, kind: Optional[str] = None) -> Trace:
@@ -46,6 +49,8 @@ def build_trace(d: Dict, kind: Optional[str] = None) -> Trace:
         return trace_from_dynamics(d)
     if kind == "search":
         return trace_from_search(d)
+    if kind == "serving":
+        return trace_from_serving(d)
     if kind == "cluster":
         return trace_from_cluster(d)
     if kind == "report":

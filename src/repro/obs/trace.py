@@ -21,6 +21,9 @@ The builders turn each report layer into tracks:
   * :func:`trace_from_cluster` — one process group per tenant, each
     tenant's iteration shifted by its staggered phase, contended links
     as instants on a cluster process;
+  * :func:`trace_from_serving` — a ``ServingReport``'s request
+    lifetimes (queue/prefill/decode spans packed into lanes) with SLO
+    violations as red instants, plus the priced prefill/decode plans;
   * :func:`trace_from_dynamics` — the event trace (link_fail, replan
     mode, evictions) as instants + replan-cost spans and
     stretch/dirty-set counters, followed by the final cluster plan.
@@ -390,6 +393,74 @@ def trace_from_cluster(report, topo=None, trace: Optional[Trace] = None,
         trace_from_report(job["report"], topo=topo, trace=trace,
                           pid=pid_base + i, label=label, t0=t0 + phase,
                           max_links=max_links)
+    return trace
+
+
+def trace_from_serving(report, topo=None, trace: Optional[Trace] = None,
+                       pid_base: int = 1, max_links: int = 8) -> Trace:
+    """A ``ServingReport``: one serving process whose lanes carry each
+    request's lifetime — a *queue* span (arrival to prefill admission),
+    a *prefill* span (admission to first token) and a *decode* span
+    (first token to finish) — with SLO violations flagged as red
+    instants, plus the priced prefill/decode batch plans as their own
+    processes.  Requests are packed greedily into lanes so concurrent
+    lifetimes never overlap on one track (the ``validate_chrome``
+    invariant)."""
+    d = _as_dict(report)
+    trace = trace if trace is not None else Trace()
+    spid = trace.process(
+        pid_base - 1,
+        f"serving {d.get('name', '?')} "
+        f"ttft_p99={d.get('ttft', {}).get('p99', 0.0):.4g}s "
+        f"attain={d.get('slo_attainment', 0.0):.3g}",
+        sort_index=-1)
+    summary = {k: d.get(k) for k in
+               ("offered_rps", "goodput_rps", "slo_attainment",
+                "stagger_s", "horizon_s", "kv_bytes_per_request")}
+    summary["ttft"] = d.get("ttft", {})
+    summary["tpot"] = d.get("tpot", {})
+    trace.instant("summary", 0.0, pid=spid, tid=0, scope="p", args=summary)
+    slo = d.get("slo", {})
+    lanes: List[float] = []  # per-lane last span end
+    reqs = sorted(d.get("requests", []),
+                  key=lambda r: (r.get("t_arrive", 0.0), str(r.get("rid"))))
+    for r in reqs:
+        t_arr = r.get("t_arrive", 0.0)
+        t_pf = r.get("t_prefill", t_arr)
+        t_first = r.get("t_first")
+        t_fin = r.get("t_finish")
+        if t_first is None or t_fin is None:
+            continue
+        lane = next((i for i, end in enumerate(lanes)
+                     if end <= t_arr + 1e-12), None)
+        if lane is None:
+            lane = len(lanes)
+            lanes.append(0.0)
+            trace.thread(spid, lane, f"lane {lane}")
+        lanes[lane] = t_fin
+        rid = r.get("rid", "?")
+        args = {"ttft_s": r.get("ttft"), "tpot_s": r.get("tpot"),
+                "slo_ok": r.get("slo_ok")}
+        if t_pf > t_arr:
+            trace.span(f"queue:{rid}", t_arr, t_pf - t_arr, pid=spid,
+                       tid=lane, cat="queue")
+        trace.span(f"prefill:{rid}", t_pf, t_first - t_pf, pid=spid,
+                   tid=lane, cat="prefill", args=args)
+        trace.span(f"decode:{rid}", t_first, t_fin - t_first, pid=spid,
+                   tid=lane, cat="decode")
+        if not r.get("slo_ok", True):
+            trace.instant(
+                f"slo_violation:{rid}", t_first, pid=spid, tid=lane,
+                cname=EXPOSED_CNAME,
+                args={"ttft_s": r.get("ttft"), "tpot_s": r.get("tpot"),
+                      "slo_ttft_s": slo.get("ttft_s"),
+                      "slo_tpot_s": slo.get("tpot_s")})
+    for i, phase in enumerate(("prefill", "decode")):
+        ph = d.get(phase)
+        if ph:
+            trace_from_report(ph, topo=topo, trace=trace, pid=pid_base + i,
+                              label=f"{phase} batch plan",
+                              max_links=max_links)
     return trace
 
 

@@ -5,9 +5,16 @@ three-layer to the five-layer paradigm (Sec. IV-A).
              parallelization strategy emits, overlapping them with compute
              to minimize JCT (Lina-style priority, Echelon-style slack).
 ``flows``  — flow scheduler ("Horizontal" co-design): places multiple jobs'
-             flows onto shared links (CASSINI-style staggering).
+             flows onto shared links (CASSINI-style staggering), periodic
+             training profiles and non-periodic serving bursts alike.
+``arrivals`` — open-loop request processes (seeded Poisson /
+             trace-driven) feeding the serving co-design layer.
 ``atp``    — "Host-Net" co-design: in-network aggregation modeling (ATP).
 """
 from repro.sched.tasks import SimResult, simulate_iteration  # noqa: F401
-from repro.sched.flows import (JobProfile, multi_job_jct,  # noqa: F401
-                               stagger_jobs, worst_stretch)
+from repro.sched.flows import (BurstProfile, JobProfile,  # noqa: F401
+                               multi_job_jct, stagger_jobs, stagger_mixed,
+                               worst_stretch)
+from repro.sched.arrivals import (Arrival, PoissonArrivals,  # noqa: F401
+                                  TraceArrivals, demand_series,
+                                  offered_load)

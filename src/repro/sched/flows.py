@@ -135,6 +135,143 @@ def _simulate_link(jobs: Sequence[JobProfile], phases: Sequence[float],
     return _simulate_links(jobs, phases, None, horizon_iters, dt)
 
 
+# ---------------------------------------------------------------------------
+# Non-periodic (arrival-driven) profiles: the serving path
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BurstProfile:
+    """A non-periodic tenant as seen by the shared network: an explicit
+    list of communication bursts at absolute ``(scheduled_start_s,
+    comm_s)`` — e.g. a serving tenant's per-batch transfer windows under
+    an open-loop arrival process.  Bursts are FIFO-chained: a burst
+    starts at ``max(scheduled_start, previous burst's finish)`` (one
+    transfer engine per tenant), so queueing delay propagates."""
+
+    name: str
+    bursts: Tuple[Tuple[float, float], ...] = ()
+    demand_frac: float = 1.0
+
+    @property
+    def total_comm_s(self) -> float:
+        return sum(c for _, c in self.bursts)
+
+
+def _simulate_mixed(jobs: Sequence[JobProfile], phases: Sequence[float],
+                    bursts: Sequence[BurstProfile],
+                    link_demands: Optional[LinkDemands] = None,
+                    burst_demands: Optional[LinkDemands] = None,
+                    horizon_iters: int = 20, dt: float = 1e-4
+                    ) -> Tuple[Dict[str, float], Dict[str, float]]:
+    """Periodic pulse trains and non-periodic burst tenants sharing one
+    set of links.  Same exact event-driven engine as
+    :func:`_simulate_links` (rates are piecewise constant between phase
+    transitions / burst starts), with burst tenants idle between their
+    scheduled windows.  Returns ``(avg iteration time per periodic job,
+    comm stretch per burst tenant)`` — stretch = total contended burst
+    time / total solo burst time (1.0 = unaffected)."""
+    if len(phases) != len(jobs):
+        raise ValueError(f"{len(phases)} phases for {len(jobs)} jobs")
+    if link_demands is None:
+        link_demands = [{"shared": j.demand_frac} for j in jobs]
+    if burst_demands is None:
+        burst_demands = [{"shared": b.demand_frac} for b in bursts]
+    if len(link_demands) != len(jobs) or len(burst_demands) != len(bursts):
+        raise ValueError("demand maps must match jobs/bursts 1:1")
+    t = 0.0
+    state = []
+    for j, ph in zip(jobs, phases):
+        state.append({"job": j, "phase": "compute",
+                      "remaining": j.compute_s + (ph % j.period),
+                      "iters": 0, "t_done": []})
+    bstate = []
+    for b in bursts:
+        bstate.append({"prof": b, "i": 0, "active": False,
+                       "remaining": 0.0, "busy": 0.0})
+    horizon_t = max((b.bursts[-1][0] for b in bursts if b.bursts),
+                    default=0.0)
+    periods = [j.period for j in jobs]
+    max_t = (horizon_iters * max(periods, default=1.0)
+             * (len(jobs) + len(bursts) + 3)) + 2 * horizon_t + 1.0
+
+    def unfinished() -> bool:
+        if any(s["iters"] < horizon_iters for s in state):
+            return True
+        return any(bs["active"] or bs["i"] < len(bs["prof"].bursts)
+                   for bs in bstate)
+
+    while unfinished() and t < max_t:
+        # start any burst whose scheduled time has come (FIFO per tenant)
+        for bs in bstate:
+            if not bs["active"] and bs["i"] < len(bs["prof"].bursts):
+                sched, comm = bs["prof"].bursts[bs["i"]]
+                if t >= sched - 1e-12:
+                    bs["active"] = True
+                    bs["remaining"] = comm
+        total_d: Dict[Hashable, float] = {}
+        for s, dem in zip(state, link_demands):
+            if s["phase"] == "comm":
+                for link, d in dem.items():
+                    total_d[link] = total_d.get(link, 0.0) + d
+        for bs, dem in zip(bstate, burst_demands):
+            if bs["active"]:
+                for link, d in dem.items():
+                    total_d[link] = total_d.get(link, 0.0) + d
+
+        def rate_of(dem) -> float:
+            rate = 1.0
+            for link in dem:
+                td = total_d.get(link, 0.0)
+                if td > 1.0:
+                    rate = min(rate, 1.0 / td)
+            return rate
+
+        rates = [1.0 if s["phase"] == "compute" else rate_of(dem)
+                 for s, dem in zip(state, link_demands)]
+        brates = [rate_of(dem) if bs["active"] else 0.0
+                  for bs, dem in zip(bstate, burst_demands)]
+        events = [s["remaining"] / r for s, r in zip(state, rates) if r > 0]
+        events += [bs["remaining"] / r for bs, r in zip(bstate, brates)
+                   if bs["active"] and r > 0]
+        # idle bursts wake at their scheduled start — that's an event too
+        for bs in bstate:
+            if not bs["active"] and bs["i"] < len(bs["prof"].bursts):
+                events.append(max(bs["prof"].bursts[bs["i"]][0] - t, 0.0))
+        step = max(min(events, default=dt), 1e-12)
+        for s, rate in zip(state, rates):
+            s["remaining"] -= step * rate
+            if s["remaining"] <= 1e-12:
+                if s["phase"] == "compute":
+                    s["phase"] = "comm"
+                    s["remaining"] = s["job"].comm_s
+                else:
+                    s["phase"] = "compute"
+                    s["remaining"] = s["job"].compute_s
+                    s["iters"] += 1
+                    s["t_done"].append(t + step)
+        for bs, rate in zip(bstate, brates):
+            if bs["active"]:
+                bs["remaining"] -= step * rate
+                bs["busy"] += step
+                if bs["remaining"] <= 1e-12:
+                    bs["active"] = False
+                    bs["i"] += 1
+        t += step
+    jct: Dict[str, float] = {}
+    for s in state:
+        if s["iters"] >= 2:
+            d = s["t_done"]
+            jct[s["job"].name] = (d[-1] - d[0]) / (len(d) - 1)
+        else:
+            jct[s["job"].name] = float("inf")
+    stretch: Dict[str, float] = {}
+    for bs in bstate:
+        solo = bs["prof"].total_comm_s
+        stretch[bs["prof"].name] = bs["busy"] / solo if solo > 0 else 1.0
+    return jct, stretch
+
+
 def multi_job_jct(jobs: Sequence[JobProfile], phases: Sequence[float],
                   link_demands: Optional[LinkDemands] = None,
                   horizon_iters: int = 20, dt: float = 1e-4
@@ -182,6 +319,51 @@ def stagger_jobs(jobs: Sequence[JobProfile], grid: int = 8,
             best = phases
             best_jct = jct
     return best, base, best_jct
+
+
+def stagger_mixed(jobs: Sequence[JobProfile],
+                  bursts: Sequence[BurstProfile], grid: int = 8,
+                  link_demands: Optional[LinkDemands] = None,
+                  burst_demands: Optional[LinkDemands] = None,
+                  horizon_iters: int = 20, dt: float = 1e-4, meters=None
+                  ) -> Tuple[Tuple[float, ...],
+                             Tuple[Dict[str, float], Dict[str, float]],
+                             Tuple[Dict[str, float], Dict[str, float]]]:
+    """CASSINI for training/serving co-tenancy: grid over the periodic
+    jobs' phase offsets with the serving bursts pinned at their
+    arrival-driven absolute times (you cannot stagger a user's request),
+    minimizing the worst of (training stretch, serving burst stretch).
+
+    Returns ``(best_phases, (jct, burst_stretch) naive,
+    (jct, burst_stretch) staggered)``.  The zero-phase schedule is in the
+    search set, so the staggered worst case is never worse."""
+
+    def sim(phases):
+        if meters is not None:
+            meters.incr("flows.stagger_mixed.evals")
+        return _simulate_mixed(jobs, phases, bursts, link_demands,
+                               burst_demands, horizon_iters, dt)
+
+    def val(jct, stretch):
+        worst = max(stretch.values(), default=1.0)
+        if jobs:
+            worst = max(worst, worst_stretch(jct, jobs))
+        return worst
+
+    base_phases = tuple(0.0 for _ in jobs)
+    base = sim(base_phases)
+    best, best_res, best_val = base_phases, base, val(*base)
+    # every periodic job is free: the bursts are the pinned reference
+    grids = [[i / grid * j.period for i in range(grid)] for j in jobs]
+    for combo in itertools.product(*grids):
+        phases = tuple(combo)
+        if phases == base_phases:
+            continue
+        res = sim(phases)
+        v = val(*res)
+        if v < best_val - 1e-9:
+            best_val, best, best_res = v, phases, res
+    return best, base, best_res
 
 
 def restagger_jobs(jobs: Sequence[JobProfile], phases: Sequence[float],

@@ -30,6 +30,13 @@ class Request:
     max_new: int
     out: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # measured request lifecycle, in batcher step indices: admission into
+    # a slot, first emitted token, completion.  The measured counterpart
+    # of the modeled TTFT/TPOT in ``codesign.serving`` (same
+    # measured-vs-modeled idiom as the kernel probes).
+    t_admit: Optional[int] = None
+    t_first: Optional[int] = None
+    t_finish: Optional[int] = None
 
 
 class ContinuousBatcher:
@@ -67,6 +74,7 @@ class ContinuousBatcher:
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+        self.steps = 0  # decode steps executed; indexes request lifecycle
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int, rid: int) -> None:
@@ -94,6 +102,7 @@ class ContinuousBatcher:
         for s in range(self.max_slots):
             if self.slot_req[s] is None and self.queue:
                 req = self.queue.pop(0)
+                req.t_admit = self.steps
                 self.slot_req[s] = req
                 self.slot_pending[s] = list(req.prompt)
                 self.pos[s] = 0
@@ -141,18 +150,24 @@ class ContinuousBatcher:
                     # prompt fully ingested: this step's logits are the
                     # first generation
                     tok = int(nxt[s])
+                    if not req.out:
+                        req.t_first = self.steps
                     req.out.append(tok)
                     emitted[req.rid] = tok
             else:
                 tok = int(nxt[s])
                 self.pos[s] += 1
+                if not req.out:
+                    req.t_first = self.steps
                 req.out.append(tok)
                 emitted[req.rid] = tok
             if len(req.out) >= req.max_new or \
                     self.pos[s] >= self.max_len - 1:
                 req.done = True
+                req.t_finish = self.steps
                 self.completed.append(req)
                 self.slot_req[s] = None
+        self.steps += 1
         return emitted
 
     def run(self, max_steps: int = 10_000) -> List[Request]:

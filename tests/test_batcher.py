@@ -106,3 +106,25 @@ def test_cross_attn_arch_recycles_slots_consistently():
     b.submit([3, 1, 4], 5, rid=1)
     done = {r.rid: r.out for r in b.run()}
     assert done[1] == ref
+
+
+def test_request_lifecycle_step_indices():
+    """Each request records the batcher step at which it was admitted,
+    emitted its first token, and finished — the measured-side mirror of
+    the serving model's t_prefill/t_first/t_finish timestamps."""
+    cfg = smoke_config("qwen2-0.5b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = ContinuousBatcher(cfg, params, max_slots=1, max_len=64)
+    b.submit([1, 2, 3], 4, rid=0)
+    b.submit([5, 6], 3, rid=1)  # queued behind rid 0 (one slot)
+    done = {r.rid: r for r in b.run()}
+    for r in done.values():
+        assert r.t_admit is not None
+        assert r.t_first is not None
+        assert r.t_finish is not None
+        assert r.t_admit <= r.t_first <= r.t_finish
+        # decode emits one token per step after the first
+        assert r.t_finish - r.t_first == len(r.out) - 1
+    # rid 1 waited for the slot: admitted strictly after rid 0 finished
+    assert done[1].t_admit > done[0].t_admit
+    assert done[1].t_admit >= done[0].t_finish

@@ -335,3 +335,56 @@ def test_bench_trace_stays_incremental():
     dead = set(topo.hosts[2])
     for jp in rep.final.jobs:
         assert not set(jp.devices) & dead
+
+
+# ---------------------------------------------------------------------------
+# restore billing (checkpoint-restore cost on eviction / re-placement)
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_state_bytes_arithmetic():
+    from repro.checkpoint import checkpoint_state_bytes
+    total = CFG.param_counts()["total"]
+    # f32 master copy + two AdamW f32 moments = 12 bytes per parameter
+    assert checkpoint_state_bytes(CFG) == total * 12
+    assert checkpoint_state_bytes(CFG, param_bytes=2, moments=0) == \
+        total * 2
+
+
+def test_host_fail_bills_restore_time():
+    """A re-placed job pays checkpoint-restore: optimizer state bytes
+    over the job's surviving ingress bandwidth on the degraded fabric."""
+    from repro.checkpoint import checkpoint_state_bytes
+    topo = fat_tree(num_hosts=4, gpus_per_host=2, hosts_per_rack=1,
+                    racks_per_pod=1, agg_redundancy=2, nic_bw=2e9,
+                    agg_bw=8e9, oversub=4.0, pcie_bw=4e9)
+    dyn = ClusterDynamics([_job("a", (0, 4)), _job("b", (2, 6))], topo,
+                          grid=4)
+    rec = dyn.apply(Event("host_fail", host=2))   # job a loses device 4
+    assert rec.restore_s > 0.0                    # a moved, a pays
+    assert dyn.report is not None
+    # ingress of a 2-device job is at most 2 NICs' worth
+    lower = checkpoint_state_bytes(CFG) / (2 * 4e9)
+    assert rec.restore_s >= lower
+    # the untouched straggler path bills nothing
+    rec2 = dyn.apply(Event("straggler", name="b", factor=1.5))
+    assert rec2.restore_s == 0.0
+
+
+def test_eviction_bills_restore_and_report_totals():
+    jobs, topo = _small_cluster()
+    dyn = ClusterDynamics(jobs, topo, grid=4)
+    rec = dyn.apply(Event("host_fail", host=3))   # evicts "b"
+    assert rec.evicted == ["b"]
+    assert rec.restore_s > 0.0                    # eviction is billed too
+    rep = dyn.run([])
+    assert rep.total_restore_s == pytest.approx(
+        sum(r.restore_s for r in rep.records))
+    # restore_s survives the JSON round trip (and defaults on old docs)
+    wire = json.loads(json.dumps(rep.to_dict()))
+    back = DynamicsReport.from_dict(wire, {s.name: s for s in jobs})
+    assert [r.restore_s for r in back.records] == \
+        [r.restore_s for r in rep.records]
+    del wire["records"][0]["restore_s"]
+    old = DynamicsReport.from_dict(wire, {s.name: s for s in jobs})
+    assert old.records[0].restore_s == 0.0

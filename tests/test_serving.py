@@ -1,0 +1,228 @@
+"""Serving co-design (repro.codesign.serving): SLO objectives over the
+shared metric registry, prefill/decode/KV pricing through the CCL and
+network layers, co-tenant contention, and the stagger search."""
+import dataclasses
+import json
+import os
+import sys
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# canonical contended scenarios live next to the benchmark harness so CI
+# assertions, recorded numbers, and this suite cannot drift
+from benchmarks.paper_claims import (_mixed_serving_cluster,
+                                     _serving_cotenant_problem)
+
+from repro.codesign import (ClusterReport, CotenantPulse, Objective,
+                            ServingReport, ServingSLO, ServingSpec,
+                            kv_bytes_per_token, plan, plan_cluster,
+                            search, serving_problem)
+from repro.codesign.report import OBJECTIVE_METRICS, metric_value
+from repro.codesign.serving import _advance, _percentile
+from repro.core.knobs import Search
+from repro.core.types import ModelConfig
+from repro.net.topology import fat_tree
+from repro.obs import validate_chrome
+from repro.obs.export import build_trace, detect_kind
+from repro.sched.arrivals import Arrival, PoissonArrivals, TraceArrivals
+
+CFG = ModelConfig(name="tiny", family="dense", source="[test]",
+                  num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+                  d_ff=1024, vocab_size=1000)
+MLA = dataclasses.replace(CFG, name="tiny-mla", attention="mla",
+                          kv_lora_rank=64, qk_rope_head_dim=16)
+
+
+def _spec(**kw):
+    base = dict(name="svc", cfg=CFG, prefill_devices=2, decode_devices=2,
+                arrivals=PoissonArrivals(rate_rps=25.0, prompt_tokens=128,
+                                         decode_tokens=8, seed=3),
+                slo=ServingSLO(ttft_s=0.5, tpot_s=0.05), horizon_s=1.0)
+    base.update(kw)
+    return ServingSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# metric registry + Objective SLO semantics (shared by training & serving)
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_metric_raises_with_valid_set():
+    with pytest.raises(ValueError) as ei:
+        Objective(minimize="ttft_p42")
+    msg = str(ei.value)
+    assert "ttft_p42" in msg and "valid metrics" in msg
+    # the error names the registry, which spans both problem kinds
+    assert "jct" in msg and "ttft_p99" in msg
+
+
+def test_unknown_constraint_metric_raises():
+    with pytest.raises(ValueError, match="valid metrics"):
+        Objective(minimize="jct", constraints={"nope": 1.0})
+
+
+def test_serving_metrics_registered_with_directions():
+    for m in ("ttft_p50", "ttft_p95", "ttft_p99", "tpot_p50", "tpot_p99"):
+        assert OBJECTIVE_METRICS[m] is False   # minimized
+    for m in ("goodput", "slo_attainment"):
+        assert OBJECTIVE_METRICS[m] is True    # maximized
+
+
+def test_metric_value_wrong_report_kind():
+    rep = plan(serving_problem(_spec(), fat_tree(16)))
+    assert metric_value(rep, "ttft_p99") == rep.ttft_p99
+    with pytest.raises(ValueError, match="different problem kind"):
+        metric_value(rep, "wire_bytes_saved")
+
+
+def test_constraints_feasibility_both_directions():
+    rep = plan(serving_problem(_spec(), fat_tree(16)))
+    ok = Objective(minimize="ttft_p99",
+                   constraints={"ttft_p99": rep.ttft_p99 + 1.0,
+                                "slo_attainment": 0.0})
+    assert ok.feasible(rep) and ok.infeasible_reason(rep) is None
+    # upper bound on a minimized metric
+    low = Objective(minimize="ttft_p99",
+                    constraints={"ttft_p99": rep.ttft_p99 / 2})
+    assert "ttft_p99" in low.infeasible_reason(rep)
+    # lower bound on a maximized metric
+    hi = Objective(minimize="ttft_p99",
+                   constraints={"goodput": rep.goodput + 1.0})
+    assert "goodput" in hi.infeasible_reason(rep)
+
+
+# ---------------------------------------------------------------------------
+# percentile / contention-advance properties
+# ---------------------------------------------------------------------------
+
+
+@given(st.lists(st.floats(0.0, 10.0), min_size=1, max_size=50))
+@settings(max_examples=20, deadline=None)
+def test_percentile_monotone_and_bounded(vals):
+    ps = [_percentile(vals, q) for q in (0.50, 0.95, 0.99)]
+    assert ps == sorted(ps)
+    assert min(vals) <= ps[0] and ps[-1] <= max(vals)
+
+
+@given(st.floats(0.0, 0.02), st.floats(0.001, 0.02), st.floats(0.0, 0.01))
+@settings(max_examples=20, deadline=None)
+def test_advance_contention_only_slows(compute, comm, phase):
+    """A co-tenant pulse can only delay a work item, and never below the
+    solo duration; with no shared links it is exactly solo."""
+    dem = {("a", "b"): 0.8}
+    pulse = CotenantPulse("t", period_s=0.01, comm_s=0.004, phase_s=phase,
+                          demand={("a", "b"): 1.0})
+    solo = _advance(0.0, compute, comm, dem, ())
+    assert solo == pytest.approx(compute + comm)
+    shared = _advance(0.0, compute, comm, dem, (pulse,))
+    assert shared >= solo - 1e-12
+    foreign = CotenantPulse("t", period_s=0.01, comm_s=0.004,
+                            demand={("x", "y"): 1.0})
+    assert _advance(0.0, compute, comm, dem, (foreign,)) == \
+        pytest.approx(solo)
+
+
+# ---------------------------------------------------------------------------
+# plan_serving: determinism, accounting invariants, persistence
+# ---------------------------------------------------------------------------
+
+
+def test_kv_bytes_per_token_gqa_vs_mla():
+    gqa = kv_bytes_per_token(CFG)
+    hd = CFG.head_dim or CFG.d_model // CFG.num_heads
+    assert gqa == CFG.num_layers * 2 * CFG.num_kv_heads * hd * 2
+    mla = kv_bytes_per_token(MLA)
+    assert mla == MLA.num_layers * (64 + 16) * 2
+    assert mla < gqa  # the latent cache is the point of MLA
+
+
+def test_plan_serving_deterministic_and_goodput_bounded():
+    prob = serving_problem(_spec(), fat_tree(16))
+    r1, r2 = plan(prob), plan(prob)
+    assert r1.to_dict() == r2.to_dict()
+    assert r1.goodput <= r1.offered_rps + 1e-9
+    assert 0.0 <= r1.slo_attainment <= 1.0
+    assert len(r1.requests) > 0
+    for r in r1.requests:
+        assert r["t_arrive"] <= r["t_prefill"] <= r["t_first"] \
+            <= r["t_finish"]
+        assert r["ttft"] >= 0 and r["tpot"] >= 0
+    # KV hand-off priced as p2p tasks in the prefill plan
+    kv = [c for c in r1.prefill.choices if c.primitive == "p2p"]
+    assert len(kv) == 2  # one per prefill rank
+    assert r1.kv_bytes_per_request > 0
+
+
+def test_serving_report_json_round_trip():
+    rep = plan(serving_problem(_spec(), fat_tree(16)))
+    d = json.loads(json.dumps(rep.to_dict()))
+    rep2 = ServingReport.from_dict(d)
+    assert rep2.to_dict() == rep.to_dict()
+    assert rep2.ttft_p99 == rep.ttft_p99
+
+
+def test_serving_trace_valid_and_kind_detected():
+    spec = _spec(slo=ServingSLO(ttft_s=1e-5, tpot_s=1e-6))  # all violate
+    rep = plan(serving_problem(spec, fat_tree(16)))
+    assert rep.slo_violations()
+    d = rep.to_dict()
+    assert detect_kind(d) == "serving"
+    doc = build_trace(d).to_chrome()
+    assert validate_chrome(doc) == []
+    names = {e["name"] for e in doc["traceEvents"]}
+    assert any(n.startswith("slo_violation:") for n in names)
+    assert any(n.startswith("prefill:") for n in names)
+
+
+def test_tpot_percentiles_monotone_in_report():
+    rep = plan(serving_problem(_spec(), fat_tree(16)))
+    assert rep.ttft_p50 <= rep.ttft_p95 <= rep.ttft_p99
+    assert rep.tpot_p50 <= rep.tpot_p99
+
+
+# ---------------------------------------------------------------------------
+# co-tenancy: the stagger knob beats the naive zero-stagger baseline
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cost_model", ["alphabeta", "flowsim"])
+def test_stagger_search_beats_naive_cotenant(cost_model):
+    """Acceptance: search() over the stagger knob returns an SLO-feasible
+    plan whose p99 TTFT strictly beats the naive co-tenant baseline."""
+    prob = _serving_cotenant_problem(cost_model)
+    naive = plan(prob)
+    sp = dataclasses.replace(prob.space, stagger=Search())
+    res = search(dataclasses.replace(prob, space=sp), budget=16)
+    assert res.best.stagger_s != 0.0
+    assert res.best.ttft_p99 < naive.ttft_p99 - 1e-9
+    assert prob.objective.feasible(res.best)
+    assert res.best.slo_attainment == 1.0
+
+
+def test_mixed_cluster_cotenancy():
+    """plan_cluster over a training tenant + a serving tenant sharing
+    uplinks: serving metrics surface in ClusterReport.serving, staggering
+    never hurts the serving tenant, the training JCT barely regresses
+    against its solo plan, and the report round-trips."""
+    jobs, topo = _mixed_serving_cluster()
+    rep = plan_cluster(jobs, topo, grid=6)
+    assert rep.contended, "tenants must share tor<->agg uplinks"
+    sm = rep.serving["svc"]
+    assert sm["naive_burst_stretch"] >= 1.0
+    assert sm["staggered_burst_stretch"] <= \
+        sm["naive_burst_stretch"] + 1e-12
+    assert 0.0 <= sm["staggered_slo_attainment"] <= 1.0
+    assert sm["staggered_ttft_p99"] > 0.0
+    # the serving tenant's presence costs the training job <= 1% JCT
+    assert rep.staggered_jct["train"] <= 1.01 * rep.solo_jct["train"]
+    # determinism + persistence of the mixed report
+    rep2 = plan_cluster(jobs, topo, grid=6)
+    assert rep2.to_dict() == rep.to_dict()
+    wire = json.loads(json.dumps(rep.to_dict()))
+    back = ClusterReport.from_dict(wire, {j.name: j for j in jobs})
+    assert back.to_dict() == rep.to_dict()
+    assert back.serving["svc"] == sm
