@@ -144,8 +144,7 @@ def compressed_ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int,
     ~``p * absmax / (2^(bits-1) - 1)`` per element — the codec tolerance
     the multi-device parity test asserts, and the bias the error-feedback
     codecs (``repro.compress``) remove across iterations."""
-    from repro.kernels.compress.ref import (dequantize_ref, pack_int4,
-                                            quantize_ref, unpack_int4)
+    from repro.kernels.compress.ref import wire_codec
 
     p = axis_size
     if p == 1:
@@ -155,17 +154,7 @@ def compressed_ring_all_reduce(x: jax.Array, axis_name: str, axis_size: int,
     chunks = flat.reshape(p, -1).astype(jnp.float32)
     clen = chunks.shape[1]
     right = [(i, (i + 1) % p) for i in range(p)]
-
-    def encode(v):
-        q, scale = quantize_ref(v, bits=bits)
-        if bits == 4:
-            q = pack_int4(q)
-        return q, scale.reshape(1)
-
-    def decode(q, scale):
-        if bits == 4:
-            q = unpack_int4(q, clen)
-        return dequantize_ref(q, scale[0])
+    encode, decode = wire_codec(bits, clen)
 
     def send(v):
         q, scale = encode(v)
@@ -212,6 +201,151 @@ def torus2d_all_reduce(x: jax.Array, row_axis: str, col_axis: str,
     two ICI dimensions)."""
     x = ring_all_reduce(x, row_axis, rows)
     return ring_all_reduce(x, col_axis, cols)
+
+
+# ---------------------------------------------------------------------------
+# Synthesized schedules: generic move-list interpreter
+# ---------------------------------------------------------------------------
+
+
+def _schedule_program(schedule) -> list:
+    """Compile a ``ccl.synth.SynthSchedule`` move list into static
+    ``ppermute`` sub-batches.
+
+    One ``lax.ppermute`` is a partial permutation — every rank sends at
+    most one payload and receives at most one — so each synthesis step
+    (whose moves may fan several arrivals into one rank on disjoint
+    links) is split first-fit into sub-batches with each rank appearing
+    at most once as source and once as destination.  First-fit preserves
+    emission order for a repeated destination, which is exactly the
+    accumulation order the replay semantics define.  Correctness of
+    reading the *current* buffer inside a step rests on the synthesizer's
+    wave invariant: a chunk delivered at step ``s`` is never forwarded
+    before step ``s+1``, so same-step cross-sub-batch dependencies are
+    only same-destination accumulations (associative).
+
+    Returns a list of ``(perm, send_chunk, recv_chunk, recv_mask,
+    reduce_mask)`` tuples over *group-rank* indices (the mesh axis
+    position of each device in ``schedule.group``)."""
+    rank = {dev: i for i, dev in enumerate(schedule.group)}
+    p = len(schedule.group)
+    by_step: dict = {}
+    for m in schedule.moves:
+        by_step.setdefault(m.step, []).append(m)
+    program = []
+    for step in sorted(by_step):
+        batches: list = []
+        for m in by_step[step]:
+            s, d = rank[m.src], rank[m.dst]
+            for b in batches:
+                if s not in b["srcs"] and d not in b["dsts"]:
+                    break
+            else:
+                b = {"moves": [], "srcs": set(), "dsts": set()}
+                batches.append(b)
+            b["moves"].append((s, d, m.chunk, m.reduce))
+            b["srcs"].add(s)
+            b["dsts"].add(d)
+        for b in batches:
+            send_chunk = [0] * p
+            recv_chunk = [0] * p
+            recv_mask = [False] * p
+            reduce_mask = [False] * p
+            perm = []
+            for s, d, chunk, red in b["moves"]:
+                perm.append((s, d))
+                send_chunk[s] = chunk
+                recv_chunk[d] = chunk
+                recv_mask[d] = True
+                reduce_mask[d] = red
+            program.append((perm, send_chunk, recv_chunk, recv_mask,
+                            reduce_mask))
+    return program
+
+
+def synthesized_collective(x: jax.Array, axis_name: str, axis_size: int,
+                           schedule, bits: int = None) -> jax.Array:
+    """Execute a synthesized schedule (``ccl.synth``) as a ``shard_map``
+    program: one ``lax.ppermute`` per compiled sub-batch, a
+    ``num_chunks``-slot buffer per rank, reduce moves accumulating and
+    gather moves overwriting — the executable lowering of the move list
+    both cost models priced.
+
+    ``bits`` enables the quantize-in-the-send-loop codec (the executable
+    face of the ``synthesized+q8`` / ``+q4`` candidates, sharing
+    ``kernels.compress.ref.wire_codec`` with the compressed ring): each
+    sub-batch's payload is quantized before the permute and
+    dequantized after, so reduce hops re-quantize partial sums with the
+    same ``~hops * absmax / (2^(bits-1)-1)`` tolerance envelope.
+
+    Supported primitives: ``all_reduce`` (mirrored-tree schedules with
+    ``num_chunks == p`` and single-slot ATP schedules alike — rank
+    ``i``'s input is split into ``num_chunks`` equal slices),
+    ``broadcast`` (every rank returns the root's payload), and
+    ``all_gather`` (returns the ``(p, ...)`` stack)."""
+    p = axis_size
+    if len(schedule.group) != p:
+        raise ValueError(
+            f"schedule group size {len(schedule.group)} != mesh axis size "
+            f"{p}")
+    program = _schedule_program(schedule)
+    idx = lax.axis_index(axis_name)
+    nc = schedule.num_chunks
+    if schedule.primitive in ("all_reduce", "broadcast"):
+        flat, n, _ = _pad_to(x, nc)
+        buf = flat.reshape(nc, -1).astype(jnp.float32)
+    elif schedule.primitive == "all_gather":
+        buf = jnp.zeros((nc, x.size), jnp.float32)
+        buf = _dyn_set(buf, idx, x.reshape(-1).astype(jnp.float32))
+        n = x.size
+    else:
+        raise KeyError(
+            f"no executable lowering for synthesized {schedule.primitive}")
+    clen = buf.shape[1]
+    if bits:
+        from repro.kernels.compress.ref import wire_codec
+        encode, decode = wire_codec(bits, clen)
+    for perm, send_chunk, recv_chunk, recv_mask, reduce_mask in program:
+        payload = jnp.take(buf, jnp.asarray(send_chunk)[idx], axis=0)
+        if bits:
+            q, scale = encode(payload)
+            q = lax.ppermute(q, axis_name, perm)
+            scale = lax.ppermute(scale, axis_name, perm)
+            payload = decode(q, scale)
+        else:
+            payload = lax.ppermute(payload, axis_name, perm)
+        c = jnp.asarray(recv_chunk)[idx]
+        cur = jnp.take(buf, c, axis=0)
+        new = jnp.where(jnp.asarray(reduce_mask)[idx], cur + payload,
+                        payload)
+        new = jnp.where(jnp.asarray(recv_mask)[idx], new, cur)
+        buf = _dyn_set(buf, c, new)
+    if schedule.primitive == "all_gather":
+        return buf.reshape(nc, *x.shape).astype(x.dtype)
+    return buf.reshape(-1)[:n].reshape(x.shape).astype(x.dtype)
+
+
+def make_synthesized(schedule, mesh, axis_name: str, bits: int = None
+                     ) -> Callable:
+    """Wrap a synthesized all-reduce/broadcast schedule as a jitted
+    global-array function (shape-preserving primitives only — all-gather
+    changes the output sharding, call ``synthesized_collective`` inside
+    your own ``shard_map`` for that)."""
+    if schedule.primitive == "all_gather":
+        raise KeyError("make_synthesized is shape-preserving; lower "
+                       "all_gather schedules inside an explicit shard_map")
+    size = mesh.shape[axis_name]
+
+    def body(x):
+        return synthesized_collective(x, axis_name, size, schedule,
+                                      bits=bits)
+
+    def wrapped(x):
+        spec = P(axis_name, *([None] * (x.ndim - 1)))
+        return jax.jit(jax.shard_map(
+            body, mesh=mesh, in_specs=spec, out_specs=spec))(x)
+
+    return wrapped
 
 
 IMPLEMENTATIONS: dict = {

@@ -41,7 +41,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Protocol, Tuple
+from typing import Dict, List, Mapping, Optional, Protocol, Tuple
 
 from repro.ccl.algorithms import ALGORITHMS, generate_flows
 from repro.ccl.cost import CostParams, algo_cost
@@ -182,6 +182,58 @@ class AlphaBeta:
             cp = dataclasses.replace(cp, link_bw=cp.inter_bw / share)
         return algo_cost(task.primitive, algorithm, task.size_bytes, p, cp)
 
+    def cost_flowset(self, task: CommTask, fs: FlowSet,
+                     algorithm: Optional[str] = None) -> float:
+        """Closed-form pricing of an *explicit* flow schedule (a synthesized
+        move list, not a registered name): per step, one alpha plus the
+        busiest endpoint's serialized bytes over the tier bandwidth it
+        talks across (``inter_bw`` when the flow crosses hosts — resolved
+        through the topology when attached, else the
+        ``gpus_per_host``-contiguous heuristic).  This is the step-count
+        alpha-beta analogue of the ring/tree closed forms, so synthesized
+        candidates compete under *both* cost models, not just FlowSim.
+
+        Compressed variants (``synthesized+q8``) hand in wire-scaled
+        flowsets; the codec's encode/decode overhead is charged here from
+        the algorithm name, mirroring :func:`repro.ccl.cost.algo_cost`."""
+        cp = self.params
+        if len(task.group) <= 1 or not fs.flows:
+            return 0.0
+        if self.topo is not None:
+            host_of = self.topo.host_of
+
+            def crossing(u, v):
+                return host_of(u) != host_of(v)
+        elif cp.gpus_per_host > 1:
+            m = cp.gpus_per_host
+
+            def crossing(u, v):
+                return u // m != v // m
+        else:
+            def crossing(u, v):
+                return False
+        inter_bw = cp.inter_bw or cp.link_bw
+        by_step: Dict[int, List] = {}
+        for f in fs.flows:
+            by_step.setdefault(f.step, []).append(f)
+        total = 0.0
+        for flows in by_step.values():
+            # serialization point: a node's egress (or ingress) NIC sends
+            # (receives) its step bytes back-to-back on each tier
+            load: Dict[Tuple, float] = {}
+            for f in flows:
+                bw = inter_bw if crossing(f.src, f.dst) else cp.link_bw
+                for end in ((f.src, "tx"), (f.dst, "rx")):
+                    load[end] = load.get(end, 0.0) + f.size_bytes / bw
+            total += cp.alpha + max(load.values(), default=0.0)
+        name = algorithm or fs.algorithm
+        _, codec = split_algorithm(name)
+        if codec is not None:
+            spec = codec_spec(codec)
+            total += len(by_step) * cp.codec_alpha \
+                + spec.passes * task.size_bytes / cp.codec_bw
+        return total
+
     @classmethod
     def from_topology(cls, topo: Topology, alpha: float = None) -> "AlphaBeta":
         """Derive flat-or-hierarchical CostParams from a Topology: intra
@@ -307,6 +359,33 @@ class FlowSim:
         self._cost_memo[key] = t
         return t
 
+    def cost_flowset(self, task: CommTask, fs: FlowSet,
+                     algorithm: Optional[str] = None) -> float:
+        """Price an *explicit* flow schedule (a synthesized move list) by
+        simulating it on the topology — the same path registered
+        algorithms take, minus the generator.  Memoized alongside
+        :meth:`cost` under a schedule fingerprint (same schedule handed
+        in twice — e.g. a lossless and a wire-scaled variant share a
+        solver run but not flows — prices once each).  Compressed names
+        (``synthesized+q8``) add the codec overhead; their flowsets are
+        expected to already carry wire-scaled bytes."""
+        name = algorithm or fs.algorithm
+        fp = hash(tuple((f.src, f.dst, f.size_bytes, f.step)
+                        for f in fs.flows))
+        key = (task.primitive, name, task.size_bytes, task.group, fp)
+        if key in self._cost_memo:
+            self.meters.incr(f"{self._bucket}.cost.hit")
+            return self._cost_memo[key]
+        self.meters.incr(f"{self._bucket}.cost.miss")
+        t = simulate_flowset(self.topo, fs)
+        _, codec = split_algorithm(name)
+        if codec is not None:
+            spec = codec_spec(codec)
+            t += fs.num_steps * self.codec_alpha \
+                + spec.passes * task.size_bytes / self.codec_bw
+        self._cost_memo[key] = t
+        return t
+
 
 def flows_on_topology(topo: Topology, task: CommTask,
                       algorithm: str) -> FlowSet:
@@ -347,7 +426,9 @@ def constraint_from_allow(allow: Optional[Tuple[str, ...]]) -> Knob:
 def select_for_task(task: CommTask, model: CostModel,
                     allow: Optional[Tuple[str, ...]] = None,
                     error_budget: float = 0.0,
-                    constraint: Optional[Knob] = None) -> Selection:
+                    constraint: Optional[Knob] = None,
+                    extra_flowsets: Optional[Mapping[str, FlowSet]] = None
+                    ) -> Selection:
     """Pick the cheapest eligible algorithm for ``task`` under ``model``.
 
     ``constraint`` is the plan-space knob for this task's primitive
@@ -363,7 +444,17 @@ def select_for_task(task: CommTask, model: CostModel,
     0 excludes all lossy candidates — exactness is opt-in per task.  Only
     a ``Fixed`` constraint (a force, e.g. the driver's ``force=`` path)
     bypasses the budget — forcing one compressed algorithm is an explicit
-    accuracy decision; a ``Choice`` whitelist still respects the budget."""
+    accuracy decision; a ``Choice`` whitelist still respects the budget.
+
+    ``extra_flowsets`` maps candidate names to *explicit* flow schedules
+    (synthesized move lists from ``ccl.synth``) that compete alongside the
+    registry: each is priced through the model's ``cost_flowset`` (both
+    ``AlphaBeta`` and ``FlowSim`` implement it; models without it skip the
+    extras).  Extras bypass the structural/``supports`` guards — an
+    explicit schedule *is* its own feasibility proof — but compressed
+    extras (``synthesized+q8``) still face the error budget, and a
+    ``Choice``/``Fixed`` constraint whitelists extras by name exactly
+    like registered candidates."""
     if constraint is None:
         constraint = constraint_from_allow(allow)
     elif allow is not None:
@@ -403,6 +494,17 @@ def select_for_task(task: CommTask, model: CostModel,
             excluded.append(name)
             continue
         costs[name] = model.cost(task, name)
+    if extra_flowsets:
+        pricer = getattr(model, "cost_flowset", None)
+        for name, fs in extra_flowsets.items():
+            if pricer is None or (allowed and name not in allowed):
+                continue
+            _, codec = split_algorithm(name)
+            if codec is not None and not forced and \
+                    codec_spec(codec).effective_error > error_budget:
+                excluded.append(name)
+                continue
+            costs[name] = pricer(task, fs, algorithm=name)
     if not costs:
         raise ValueError(
             f"no eligible algorithm for primitive {task.primitive!r} with "

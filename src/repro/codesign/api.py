@@ -42,6 +42,8 @@ from typing import Dict, List, Mapping, Optional, Tuple, Union
 from repro.ccl.select import (AlphaBeta, CostModel, FlowSim, Selection,
                               constraint_from_allow, flows_on_topology,
                               select_for_task)
+from repro.ccl.synth import (DEFAULT_SYNTH_CACHE, SYNTHESIZABLE, Sketch,
+                             sketch_from_hotspots)
 from repro.compress.codec import base_algorithm, codec_spec, split_algorithm
 from repro.core.demand_builder import (DECOMPOSABLE_PRIMITIVES, DemandParams,
                                        build_demand, decompose_demand)
@@ -62,7 +64,7 @@ from repro.codesign.report import (OBJECTIVE_METRICS, CodesignReport,
 # ``stagger`` only matters for serving problems (the co-tenant phase
 # offset in seconds); training plans ignore it.
 SCALAR_KNOBS = ("placement", "policy", "error_budget", "switch_capacity",
-                "bucket_bytes", "decompose", "stagger")
+                "bucket_bytes", "decompose", "stagger", "synthesize")
 
 
 @dataclass(frozen=True)
@@ -97,6 +99,14 @@ class PlanSpace:
     # fabric — the CASSINI stagger lever, per-tenant.  ``Search()``
     # generates a grid over the co-tenant period.
     stagger: Knob = Fixed(0.0)
+    # SCCL/TACCL-style collective synthesis as a plan-space lever: False =
+    # registered algorithms only; True = synthesize topology-specific
+    # schedules (sketch-guided by this plan's hot-spot map) for the 2
+    # hottest synthesizable selection keys and let them compete in
+    # ``ccl.select`` under the active cost model; an int raises the
+    # top-k.  ``Search()`` walks [False, True] jointly with the other
+    # knobs.
+    synthesize: Knob = Fixed(False)
 
     def scalar_knobs(self) -> Dict[str, Knob]:
         return {name: getattr(self, name) for name in SCALAR_KNOBS}
@@ -389,36 +399,117 @@ def plan(problem: CodesignProblem,
             return len(pl.data_groups())
         return 1
 
-    util: Dict[Tuple, float] = {}
-    fs_memo: Dict[Tuple, object] = {}
-    bytes_saved = 0.0
-    for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
-        choice = choices[ptask.task_id]
-        algo = choice.algorithm
-        for r in range(replicas_of(ltask)):
-            group = ptask.group if r == 0 else \
-                pl.place_group(ltask.group, ltask.axis, replica=r)
-            key = (ltask.primitive, algo, ltask.size_bytes, group)
-            fs = fs_memo.get(key)
-            if fs is None:
-                replica = dataclasses.replace(ptask, group=group)
-                try:
-                    fs = flows_on_topology(topo, replica, algo)
-                except ValueError:
-                    # replica-r's group can be shaped differently from the
-                    # representative's (irregular placement); skip rather
-                    # than mis-attribute its bytes
+    def traffic_map(sketch_by_key=None) -> Tuple[Dict[Tuple, float], float]:
+        """Per-link byte map + compression wire-byte savings over every
+        replica of every task, under the current ``choices``.
+        ``sketch_by_key`` maps a selection key (primitive, size, placed
+        group) to the sketch its winning schedule was synthesized under
+        (None = unbiased) so the second pass replays the schedules that
+        actually won, replicas included."""
+        util: Dict[Tuple, float] = {}
+        fs_memo: Dict[Tuple, object] = {}
+        bytes_saved = 0.0
+        for ltask, ptask in zip(demand.comm_tasks, placed.comm_tasks):
+            choice = choices[ptask.task_id]
+            algo = choice.algorithm
+            for r in range(replicas_of(ltask)):
+                group = ptask.group if r == 0 else \
+                    pl.place_group(ltask.group, ltask.axis, replica=r)
+                key = (ltask.primitive, algo, ltask.size_bytes, group)
+                fs = fs_memo.get(key)
+                if fs is None:
+                    replica = dataclasses.replace(ptask, group=group)
+                    try:
+                        if base_algorithm(algo) == "synthesized":
+                            sk = (sketch_by_key or {}).get(
+                                (ltask.primitive, ltask.size_bytes,
+                                 ptask.group))
+                            fs = DEFAULT_SYNTH_CACHE.schedule(
+                                topo, replica, sk).to_flowset(
+                                    wire_ratio=choice.wire_ratio,
+                                    algorithm=algo)
+                        else:
+                            fs = flows_on_topology(topo, replica, algo)
+                    except (ValueError, KeyError):
+                        # replica-r's group can be shaped differently from
+                        # the representative's (irregular placement); skip
+                        # rather than mis-attribute its bytes
+                        continue
+                    fs_memo[key] = fs
+                agg = aggregation_switches(topo, group, agg_capacity) \
+                    if base_algorithm(algo) == "atp" else None
+                for link, nbytes in link_utilization(topo, fs, agg).items():
+                    util[link] = util.get(link, 0.0) + nbytes
+                if choice.codec:
+                    # vs the same schedule uncompressed (the wire-byte win
+                    # the compression layer hands the network layer)
+                    bytes_saved += fs.bytes_on_wire() \
+                        * (1.0 / choice.wire_ratio - 1.0)
+        return util, bytes_saved
+
+    util, bytes_saved = traffic_map()
+
+    # Second pass — the synthesis lever (paper Sec. III-B, SCCL/TACCL):
+    # rank selection keys by exposed seconds, synthesize sketch-guided
+    # schedules for the hottest ones (the sketch's link penalties are
+    # THIS plan's hot-spot map, steering chunks off contended uplinks),
+    # and let them compete as priced candidates.  Wins re-simulate.
+    synthesize = space.synthesize.value
+    if synthesize:
+        topk = 2 if synthesize is True else int(synthesize)
+        sketch = sketch_from_hotspots(topo, util)
+        exposure: Dict[Tuple, float] = {}
+        rep: Dict[Tuple, object] = {}
+        for task in placed.comm_tasks:
+            if task.primitive not in SYNTHESIZABLE or len(task.group) < 2:
+                continue
+            key = (task.primitive, task.size_bytes, task.group)
+            exposure[key] = exposure.get(key, 0.0) \
+                + sim.task_exposed_s.get(task.task_id, 0.0)
+            rep.setdefault(key, task)
+        changed = False
+        won_sketch: Dict[Tuple, Optional[Sketch]] = {}
+        pricer = getattr(model, "cost_flowset", None)
+        for key in sorted(exposure, key=lambda k: -exposure[k])[:topk]:
+            task = rep[key]
+            budget = budget_of(task.primitive)
+            # the hot-spot map includes THIS task's own first-pass traffic
+            # (the very bytes a win would reroute), so the sketch is a
+            # bias, not a mandate: the sketched and unbiased schedules
+            # both compete and the active cost model keeps the cheaper
+            sched = DEFAULT_SYNTH_CACHE.schedule(topo, task, sketch)
+            plain = DEFAULT_SYNTH_CACHE.schedule(topo, task, None)
+            won_sketch[key] = sketch
+            if sched is not plain and pricer is not None:
+                if pricer(task, plain.to_flowset(job_id=task.job_id),
+                          algorithm="synthesized") \
+                        <= pricer(task, sched.to_flowset(job_id=task.job_id),
+                                  algorithm="synthesized"):
+                    sched, won_sketch[key] = plain, None
+            extras = {"synthesized": sched.to_flowset(job_id=task.job_id)}
+            q8 = codec_spec("q8")
+            if q8.effective_error <= budget:
+                extras["synthesized+q8"] = sched.to_flowset(
+                    job_id=task.job_id, wire_ratio=q8.wire_ratio,
+                    algorithm="synthesized+q8")
+            sel = select_for_task(
+                task, model, constraint=space.constraint_for(task.primitive),
+                error_budget=budget, extra_flowsets=extras)
+            sel_memo[key] = sel
+            for t in placed.comm_tasks:
+                if (t.primitive, t.size_bytes, t.group) != key:
                     continue
-                fs_memo[key] = fs
-            agg = aggregation_switches(topo, group, agg_capacity) \
-                if base_algorithm(algo) == "atp" else None
-            for link, nbytes in link_utilization(topo, fs, agg).items():
-                util[link] = util.get(link, 0.0) + nbytes
-            if choice.codec:
-                # vs the same schedule uncompressed (the wire-byte win the
-                # compression layer hands the network layer)
-                bytes_saved += fs.bytes_on_wire() \
-                    * (1.0 / choice.wire_ratio - 1.0)
+                if choices[t.task_id].algorithm != sel.algorithm:
+                    changed = True
+                _, codec = split_algorithm(sel.algorithm)
+                choices[t.task_id] = TaskChoice(
+                    t.task_id, t.primitive, t.size_bytes, t.group,
+                    sel.algorithm, sel.cost, sel.costs, codec=codec,
+                    wire_ratio=codec_spec(codec).wire_ratio if codec
+                    else 1.0)
+        if changed:
+            sim = simulate_iteration(placed, comm_cost, policy)
+            util, bytes_saved = traffic_map(won_sketch)
     hotspots = sorted(util.items(), key=lambda kv: -kv[1])[:problem.hotspot_k]
 
     return CodesignReport(
@@ -609,7 +700,8 @@ def _canon(value) -> Tuple:
     return ("value", value)
 
 
-def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
+def search(problem: CodesignProblem, budget: int = 32,
+           seeds_dir: Optional[str] = None) -> SearchResult:
     """Walk the free knobs of ``problem.space`` and return the best plan.
 
     ``Choice`` knobs are enumerated (Cartesian product, declaration
@@ -622,6 +714,11 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
     evaluations; per-knob attribution baselines are priced on top (at
     most one extra evaluation per free knob).
 
+    ``seeds_dir`` persists searched plans per (topology, model, mesh):
+    a previous run's winning assignment is loaded as a warm start (the
+    first candidate priced, phase ``"warm_start"``), and this run's
+    winner is saved back — ``codesign.seeds``.
+
     Deterministic by construction: no randomness, stable enumeration and
     neighbor order — the same problem and budget always return the same
     best plan."""
@@ -631,6 +728,7 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
                                                  swap_neighbors)
     space = problem.space
     free = space.free_knobs()
+    synth_base = DEFAULT_SYNTH_CACHE.meters.snapshot()
 
     # candidate values per enumerable knob, declaration order
     axes: Dict[str, List] = {}
@@ -648,11 +746,13 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
             axes[name] = [False, True]
         elif name == "stagger":  # Search: grid over the co-tenant period
             axes[name] = _stagger_candidates(problem, knob.seeds)
+        elif name == "synthesize":  # Search: registry-only, then + synth
+            axes[name] = [False, True]
         else:
             raise ValueError(
                 f"knob {name!r} is Search() but only placement, "
-                f"bucket_bytes, decompose and stagger have candidate "
-                f"generators — use Choice(...) for it")
+                f"bucket_bytes, decompose, stagger and synthesize have "
+                f"candidate generators — use Choice(...) for it")
     pinned = {name: knob.value
               for name, knob in space.scalar_knobs().items()
               if name not in axes}
@@ -720,9 +820,16 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
         elif cand is not best:
             cand.report = None
 
-    # --- phase 1: enumerate the Choice/heuristic sweep -------------------
+    # --- phase 0: warm start from a persisted seed -----------------------
     names = list(axes)
     truncated = False
+    if seeds_dir is not None and names:
+        from repro.codesign.seeds import load_seed
+        warm = load_seed(seeds_dir, problem)
+        if warm is not None and set(warm) == set(names):
+            consider(evaluate(warm, phase="warm_start"))
+
+    # --- phase 1: enumerate the Choice/heuristic sweep -------------------
     if names:
         for combo in itertools.product(*(axes[n] for n in names)):
             if state["evaluated"] >= budget:
@@ -780,12 +887,31 @@ def search(problem: CodesignProblem, budget: int = 32) -> SearchResult:
         if reverted is not best:
             reverted.report = None
 
+    if seeds_dir is not None and names:
+        from repro.codesign.seeds import save_seed
+        save_seed(seeds_dir, problem, best.assignment)
+
     frontier = sorted(order, key=lambda c: (not c.feasible, c.key))
+    telemetry = _search_telemetry(state, order, models)
+    # synthesis-solver cache counters, as THIS search's delta against the
+    # process-wide cache (repeated identical runs then report identical
+    # numbers, which the bench guards rely on)
+    synth_now = DEFAULT_SYNTH_CACHE.meters.snapshot()
+    hits = synth_now.get("synth.hit", 0.0) - synth_base.get("synth.hit", 0.0)
+    misses = synth_now.get("synth.miss", 0.0) \
+        - synth_base.get("synth.miss", 0.0)
+    if hits + misses > 0:
+        counters = telemetry["counters"]
+        counters["synth.hit"] = hits
+        counters["synth.miss"] = misses
+        counters["synth.entries"] = \
+            DEFAULT_SYNTH_CACHE.cache_stats()["synth.entries"]
+        telemetry["synth_hit_rate"] = hits / (hits + misses)
     return SearchResult(
         best=best.report, best_assignment=dict(best.assignment),
         frontier=frontier, attribution=attribution,
         evaluated=state["evaluated"], budget=budget, truncated=truncated,
-        telemetry=_search_telemetry(state, order, models))
+        telemetry=telemetry)
 
 
 def _search_telemetry(state: Dict, order: List[Candidate],

@@ -173,6 +173,15 @@ class CodesignReport:
         Objective can minimize or constrain."""
         return self.link_hotspots[0][1] if self.link_hotspots else 0.0
 
+    @property
+    def synthesized_choices(self) -> List["TaskChoice"]:
+        """The tasks the plan's synthesis pass won (algorithm
+        ``synthesized`` or a compressed variant) — what to lower with
+        ``ccl.primitives.synthesized_collective``; empty when synthesis
+        was off or never beat the registry."""
+        return [c for c in self.choices
+                if c.algorithm.split("+")[0] == "synthesized"]
+
     def algorithms_by_primitive(self) -> Dict[str, Dict[str, int]]:
         """primitive -> {algorithm: task count} histogram."""
         out: Dict[str, Dict[str, int]] = {}

@@ -88,11 +88,16 @@ class Choice(Knob):
 
 
 class Search(Knob):
-    """An open knob: candidates come from an optimizer.  Today only the
-    placement knob has one (``codesign.placement_search``); as an
+    """An open knob: candidates come from an optimizer — placement pulls
+    heuristics + a hill climb (``codesign.placement_search``),
+    ``bucket_bytes``/``stagger`` generate deterministic ladders/grids,
+    and ``synthesize`` opens the SCCL/TACCL-style schedule synthesizer
+    (``ccl.synth``) as a priced candidate next to the registry; as an
     algorithm constraint it means "every registered candidate", i.e. the
     selection layer's default.  ``seeds`` lets the caller inject extra
-    starting candidates (e.g. hand-built Placements)."""
+    starting candidates (e.g. hand-built Placements) — and
+    ``search(problem, seeds_dir=...)`` persists each run's winner as a
+    warm start for the next (``codesign.seeds``)."""
 
     __slots__ = ("seeds",)
 

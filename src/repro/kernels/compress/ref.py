@@ -63,6 +63,29 @@ def unpack_int4(packed: jax.Array, n: int) -> jax.Array:
     return out.astype(jnp.int8)
 
 
+def wire_codec(bits: int, length: int):
+    """(encode, decode) pair for quantize-on-the-wire collectives: encode
+    maps a length-``length`` fp chunk to (int payload, 1-element fp32
+    scale) — nibble-packed for ``bits=4`` so the wire saving is real —
+    and decode inverts it.  Shared by the compressed ring and the
+    synthesized move-list interpreter in ``ccl.primitives`` so every
+    send-loop compresses identically (and swaps to the Pallas kernels
+    together)."""
+
+    def encode(v: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        q, scale = quantize_ref(v, bits=bits)
+        if bits == 4:
+            q = pack_int4(q)
+        return q, scale.reshape(1)
+
+    def decode(q: jax.Array, scale: jax.Array) -> jax.Array:
+        if bits == 4:
+            q = unpack_int4(q, length)
+        return dequantize_ref(q, scale[0])
+
+    return encode, decode
+
+
 def sparsify_ref(x: jax.Array, thresh: jax.Array) -> jax.Array:
     """Magnitude thresholding: keep entries with |x| >= thresh (thresh
     broadcasts; per-row for 2D inputs), zero the rest."""
